@@ -1,0 +1,26 @@
+"""Paper Fig. 14: component ablation — Naive / w/Partition / w/Scheduler /
+full Bullet."""
+
+from benchmarks.common import simulate
+
+VARIANTS = {
+    "naive": "naive",                   # no partition, no scheduler
+    "w_partition": "bullet-nosched",    # partitioning only
+    "w_scheduler": "bullet-nopart",     # reorder+pause only
+    "bullet": "bullet",                 # full system
+}
+
+
+def run(emit) -> None:
+    emit("# fig14: dataset,variant,mean_ttft_ms,mean_tpot_ms,"
+         "throughput_tok_s,goodput")
+    for dataset, rate in (("sharegpt", 40.0), ("azure-code", 7.0)):
+        res = {}
+        for name, system in VARIANTS.items():
+            m, _, _ = simulate(system, dataset, rate)
+            res[name] = m
+            emit(f"fig14,{dataset},{name},{m.mean_ttft_s*1e3:.1f},"
+                 f"{m.mean_tpot_ms:.1f},{m.throughput_tok_s:.0f},"
+                 f"{m.goodput:.3f}")
+        assert res["bullet"].goodput >= max(
+            res["naive"].goodput - 0.05, 0), "full system regressed vs naive"

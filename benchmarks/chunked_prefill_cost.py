@@ -1,0 +1,32 @@
+"""Paper Fig. 4: per-chunk utilization and latency of chunked prefill on a
+16k-token sequence (no hybrid batching) — KV reloads slow successive chunks
+and shrink effective utilization; larger chunks trade TPOT for it."""
+
+from benchmarks.common import HW, MODEL, truth
+from repro.core import analytics as A
+from repro.core.estimator import PerfEstimator
+from repro.core.profiler import TRUE_PARAMS
+
+SEQ = 16_384
+
+
+def run(emit) -> None:
+    est = PerfEstimator(HW, TRUE_PARAMS)
+    emit("# fig4: chunk_size,chunk_idx,ctx_start,latency_ms,"
+         "rel_compute_util,cum_latency_ms")
+    unchunked = est.lockstep_iter_time(MODEL, [(SEQ, 0)], 0, 0)
+    for cs in (1024, 2048, 4096):
+        cum = 0.0
+        first = None
+        for i in range(SEQ // cs):
+            t = est.lockstep_iter_time(MODEL, [(cs, i * cs)], 0, 0)
+            cum += t
+            if first is None:
+                first = t
+            c = A.prefill_cost(MODEL, cs, i * cs)
+            util = c.gemm_flops / max(t, 1e-12) / (
+                HW.total_flops)
+            emit(f"fig4,{cs},{i},{i*cs},{t*1e3:.2f},{util:.3f},{cum*1e3:.1f}")
+        emit(f"fig4-summary,{cs},last_over_first,"
+             f"{(t/first):.2f},total_vs_unchunked,{cum/unchunked:.2f}")
+    emit(f"fig4-summary,unchunked,latency_ms,{unchunked*1e3:.1f}")

@@ -1,0 +1,49 @@
+"""Shared benchmark setup: fitted estimator + surrogate truth over the
+paper's serving instance (Llama-3.1-8B on an A100-class 2-chip v5e slice)."""
+
+from __future__ import annotations
+
+import functools
+
+from repro.configs import get_config
+from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+from repro.core.profiler import SurrogateMachine, run_profiling
+from repro.core.simulate import SimConfig, ServingSimulator
+from repro.serving.request import WORKLOAD_SLOS
+from repro.serving.workload import generate_trace
+
+MODEL = get_config("llama3.1-8b")
+HW = HardwareSpec(n_chips=2)
+
+#: (dataset, request rates) per paper Fig. 11 — rates scaled to the v5e-2
+#: instance (A100: 312 TF dense bf16; v5e-2: 394 TF)
+WORKLOAD_RATES = {
+    "sharegpt": (30.0, 45.0),
+    "azure-code": (6.0, 8.0),
+    "arxiv-summary": (2.0, 2.5),
+}
+
+SYSTEMS = ["bullet", "chunked-512", "chunked-1024", "chunked-2048",
+           "naive", "bullet-fix8", "bullet-fix16", "bullet-nosched",
+           "bullet-nopart"]
+
+
+@functools.lru_cache(maxsize=1)
+def fitted_estimator() -> PerfEstimator:
+    samples = run_profiling(MODEL, HW, max_sl=4096, max_bs=32, max_cl=4096)
+    return PerfEstimator(HW, fit_params(samples, MODEL, HW, iters=30))
+
+
+def truth(seed: int = 7) -> SurrogateMachine:
+    return SurrogateMachine(HW, seed=seed)
+
+
+def simulate(system: str, dataset: str, rate: float, *, duration: float = 25.0,
+             seed: int = 1, log_timeline: bool = False):
+    slo = WORKLOAD_SLOS[dataset]
+    sim = SimConfig(model=MODEL, hw=HW, slo=slo)
+    trace = generate_trace(dataset, rate_req_s=rate, duration_s=duration,
+                           seed=seed)
+    s = ServingSimulator(sim, fitted_estimator(), truth(), system)
+    metrics = s.run(trace, log_timeline=log_timeline)
+    return metrics, trace, s

@@ -1,0 +1,27 @@
+"""Paper Fig. 15: estimator accuracy — SLO-compliance classification rate
+and predicted-vs-actual duration distribution over a live workload."""
+
+import numpy as np
+
+from benchmarks.common import simulate
+
+
+def run(emit) -> None:
+    _, _, sim = simulate("bullet", "sharegpt", 35.0, duration=20.0)
+    pairs = sim.pred_actual
+    rel = np.array([abs(p / a - 1.0) for _, p, a in pairs if a > 0])
+    emit("# fig15: metric,value")
+    emit(f"fig15,n_predictions,{len(pairs)}")
+    emit(f"fig15,mean_relative_error,{rel.mean():.3f}")
+    emit(f"fig15,p90_relative_error,{np.percentile(rel, 90):.3f}")
+    # SLO-compliance classification at several latency thresholds
+    for thresh_ms in (2.0, 5.0, 10.0, 20.0):
+        t = thresh_ms / 1e3
+        agree = sum((p <= t) == (a <= t) for _, p, a in pairs)
+        emit(f"fig15,slo_classification_acc@{thresh_ms}ms,"
+             f"{agree/len(pairs):.3f}")
+    by_kind = {}
+    for k, p, a in pairs:
+        by_kind.setdefault(k, []).append(abs(p / a - 1.0))
+    for k, v in by_kind.items():
+        emit(f"fig15,mean_rel_err_{k},{np.mean(v):.3f}")

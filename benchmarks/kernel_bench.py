@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: analytic TPU-v5e timings for the Pallas kernels
+vs the XLA fallback (interpret-mode wall clock is meaningless on CPU; the
+derivation is VMEM-traffic based, validated for correctness separately in
+tests/test_kernels.py). This quantifies the §Perf attention hillclimb."""
+
+from repro.configs import get_config
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+CFG = get_config("llama3.1-8b")
+
+
+def _flash_tpu(sl: int):
+    """Pallas flash: q,k,v,o streamed once; logits live in VMEM."""
+    h, d = CFG.n_heads, CFG.head_dim
+    k = CFG.n_kv_heads
+    io = (2 * sl * h * d + 2 * sl * k * d) * 2
+    flops = 2 * 2 * sl * sl * h * d / 2          # causal half
+    return max(io / HBM_BW, flops / PEAK_FLOPS), io, flops
+
+
+def _flash_xla(sl: int, block: int = 1024):
+    """XLA fallback materializes (H, Sq, block) logits+probs per kv block
+    in HBM: O(S^2·H) traffic."""
+    h, d = CFG.n_heads, CFG.head_dim
+    k = CFG.n_kv_heads
+    io = (2 * sl * h * d + 2 * sl * k * d) * 2
+    inter = sl * sl * h * 4 * 2 * 2              # logits+probs, write+read
+    flops = 2 * 2 * sl * sl * h * d / 2
+    return max((io + inter) / HBM_BW, flops / PEAK_FLOPS), io + inter, flops
+
+
+def _decode_tpu(batch: int, ctx: int):
+    k, d = CFG.n_kv_heads, CFG.head_dim
+    io = batch * 2 * ctx * k * d * 2             # stream cache once
+    return io / HBM_BW, io
+
+
+def _decode_xla(batch: int, ctx: int, passes: float = 4.0):
+    """Measured from the dry-run HLO: the XLA decode path makes ~4 extra
+    passes over the cache slice (scatter+transpose+convert chains)."""
+    k, d = CFG.n_kv_heads, CFG.head_dim
+    io = batch * 2 * ctx * k * d * 2 * passes
+    return io / HBM_BW, io
+
+
+def run(emit) -> None:
+    emit("# kernels: kernel,config,xla_ms,pallas_ms,speedup")
+    for sl in (2048, 8192, 32768):
+        tx, _, _ = _flash_xla(sl)
+        tp, _, _ = _flash_tpu(sl)
+        emit(f"kernels,flash_attention,seq={sl},{tx*1e3:.3f},{tp*1e3:.3f},"
+             f"{tx/tp:.2f}")
+    for batch, ctx in ((32, 4096), (128, 32768)):
+        tx, _ = _decode_xla(batch, ctx)
+        tp, _ = _decode_tpu(batch, ctx)
+        emit(f"kernels,decode_attention,b{batch}xctx{ctx},{tx*1e3:.3f},"
+             f"{tp*1e3:.3f},{tx/tp:.2f}")
+    # bullet fused kernel: overlap benefit = decode DMA hidden under prefill
+    for sl, batch, ctx in ((8192, 32, 4096),):
+        t_p, _, _ = _flash_tpu(sl)
+        t_d, _ = _decode_tpu(batch, ctx)
+        serial = t_p + t_d
+        # interleaved grid: decode's HBM streaming hides under prefill's
+        # MXU waves (DESIGN.md §2) — wall time = max of the two phases
+        fused = max(t_p, t_d)
+        emit(f"kernels,bullet_fused,p{sl}+d{batch}x{ctx},"
+             f"{serial*1e3:.3f},{fused*1e3:.3f},{serial/fused:.2f}")

@@ -1,0 +1,19 @@
+"""Paper Fig. 7: speedup of partial resource allocations normalized to the
+full machine — prefill (compute-bound) scales sub-linearly, decode
+(bandwidth-bound) super-linearly."""
+
+from benchmarks.common import HW, MODEL
+from repro.core.estimator import PerfEstimator
+from repro.core.profiler import TRUE_PARAMS
+
+
+def run(emit) -> None:
+    est = PerfEstimator(HW, TRUE_PARAMS)
+    U = HW.total_units
+    t_p_full = est.prefill_time(MODEL, 4096, U)
+    t_d_full = est.decode_iter_time(MODEL, 32, 4096, U)
+    emit("# fig7: units,frac,prefill_speedup,decode_speedup,linear")
+    for u in range(2, U + 1, 2):
+        sp = t_p_full / est.prefill_time(MODEL, 4096, u)
+        sd = t_d_full / est.decode_iter_time(MODEL, 32, 4096, u)
+        emit(f"fig7,{u},{u/U:.3f},{sp:.3f},{sd:.3f},{u/U:.3f}")

@@ -1,0 +1,46 @@
+"""§Roofline deliverable: per (arch × shape × mesh) roofline terms from the
+dry-run's compiled artifacts, plus MODEL_FLOPS = 6·N(active)·D and the
+useful-compute ratio. Reads launch_results/dryrun.json (produced by
+``python -m repro.launch.dryrun --both-meshes``)."""
+
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.analytics import model_flops_per_token
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "launch_results", "dryrun.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    per_tok = model_flops_per_token(cfg)          # 6·N_active
+    if shape.kind == "train":
+        return per_tok * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return per_tok / 3 * shape.global_batch * shape.seq_len  # fwd only
+    return per_tok / 3 * shape.global_batch       # decode: 1 token/request
+
+
+def run(emit) -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline,missing_dryrun_results,run python -m repro.launch.dryrun")
+        return
+    data = json.load(open(RESULTS))
+    emit("# roofline: arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
+         "dominant,model_tflops_total,hlo_tflops_per_chip,useful_ratio,"
+         "resident_gb,fits_16gb")
+    for r in sorted(data, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        t = r["roofline"]["terms"]
+        chips = 512 if r["mesh"] == "2x16x16" else 256
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_f = r["roofline"]["flops"]             # per chip
+        useful = mf / max(hlo_f * chips, 1e-9)
+        res = r["memory"].get("tpu_resident_gb", float("nan"))
+        emit(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+             f"{t['compute_s']*1e3:.2f},{t['memory_s']*1e3:.2f},"
+             f"{t['collective_s']*1e3:.2f},{r['roofline']['dominant'][:-2]},"
+             f"{mf/1e12:.1f},{hlo_f/1e12:.3f},{useful:.2f},"
+             f"{res:.2f},{res < 16.0}")

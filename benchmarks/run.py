@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [names...]``
+
+Prints ``name,...`` CSV rows; derived headline numbers carry a
+``-summary``/``-headline`` suffix.
+"""
+
+import sys
+import time
+
+
+BENCHES = [
+    ("table1_wave_quantization", "benchmarks.wave_quantization"),
+    ("fig4_chunked_prefill", "benchmarks.chunked_prefill_cost"),
+    ("fig7_partition_scaling", "benchmarks.partition_scaling"),
+    ("fig11_end_to_end", "benchmarks.end_to_end"),
+    ("fig12_timeline", "benchmarks.timeline"),
+    ("fig13_sensitivity", "benchmarks.sensitivity"),
+    ("fig14_ablation", "benchmarks.ablation"),
+    ("fig15_estimator_accuracy", "benchmarks.estimator_accuracy"),
+    ("table3_overheads", "benchmarks.overheads"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    wanted = set(sys.argv[1:])
+    failures = []
+    for name, module in BENCHES:
+        if wanted and not any(w in name for w in wanted):
+            continue
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run(lambda line: print(line, flush=True))
+            print(f"=== {name} done in {time.time()-t0:.1f}s ===", flush=True)
+        except Exception as e:      # noqa: BLE001 - report all benches
+            failures.append((name, repr(e)))
+            import traceback
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Fig. 13: fixed-SM sensitivity — static prefill partitions trade
+TTFT against TPOT; no fixed point matches dynamic provisioning."""
+
+from benchmarks.common import HW, simulate
+
+
+def run(emit) -> None:
+    emit("# fig13: dataset,system,mean_ttft_ms,p90_ttft_ms,mean_tpot_ms,"
+         "throughput_tok_s,goodput")
+    U = HW.total_units
+    for dataset, rate in (("azure-code", 7.0), ("sharegpt", 40.0)):
+        rows = {}
+        for frac in (0.25, 0.5, 0.75, 1.0):
+            u = max(2, int(U * frac) // 2 * 2)
+            system = f"bullet-fix{u}"
+            m, _, _ = simulate(system, dataset, rate)
+            rows[system] = m
+            emit(f"fig13,{dataset},{system},{m.mean_ttft_s*1e3:.1f},"
+                 f"{m.p90_ttft_s*1e3:.1f},{m.mean_tpot_ms:.1f},"
+                 f"{m.throughput_tok_s:.0f},{m.goodput:.3f}")
+        m, _, _ = simulate("bullet", dataset, rate)
+        emit(f"fig13,{dataset},bullet-dynamic,{m.mean_ttft_s*1e3:.1f},"
+             f"{m.p90_ttft_s*1e3:.1f},{m.mean_tpot_ms:.1f},"
+             f"{m.throughput_tok_s:.0f},{m.goodput:.3f}")
+        best_fixed = max(rows.values(), key=lambda x: x.goodput)
+        emit(f"fig13-summary,{dataset},dynamic_vs_best_fixed_goodput,"
+             f"{m.goodput:.3f},vs,{best_fixed.goodput:.3f}")

@@ -1,0 +1,32 @@
+"""Paper Fig. 12: timeline of dynamic SM (unit) provisioning on Azure-Code —
+prefill allocation spikes on bursts, decode resumes after."""
+
+import numpy as np
+
+from benchmarks.common import simulate
+
+
+def run(emit) -> None:
+    m, trace, sim = simulate("bullet", "azure-code", 6.0, duration=20.0,
+                             log_timeline=True)
+    emit("# fig12: t_bucket_s,prefill_units_mean,decode_units_mean,"
+         "n_decode_mean,n_waiting_max,prefill_tokens_max")
+    log = sim.log
+    if not log:
+        emit("fig12,empty")
+        return
+    t_end = log[-1].t
+    buckets = np.linspace(0, t_end, 40)
+    for lo, hi in zip(buckets[:-1], buckets[1:]):
+        es = [e for e in log if lo <= e.t < hi]
+        if not es:
+            continue
+        emit(f"fig12,{lo:.1f},"
+             f"{np.mean([e.prefill_units for e in es]):.1f},"
+             f"{np.mean([e.decode_units for e in es]):.1f},"
+             f"{np.mean([e.n_decode for e in es]):.1f},"
+             f"{max(e.n_waiting for e in es)},"
+             f"{max(e.prefill_tokens for e in es)}")
+    units = sorted({e.prefill_units for e in log})
+    emit(f"fig12-summary,distinct_prefill_allocations,{len(units)}")
+    emit(f"fig12-summary,mean_queue_ms,{m.mean_queue_s*1e3:.1f}")

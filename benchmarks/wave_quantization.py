@@ -1,0 +1,46 @@
+"""Paper Table 1: theoretical SM/tile idle ratio from wave quantization per
+kernel/layer across sequence lengths — reproduced with Eq. 1 for the A100
+(108 SMs, the paper's numbers) and the TPU grid-slot analogue."""
+
+import math
+
+from repro.configs import get_config
+from repro.core.estimator import wave_quantization_idle
+
+CFG = get_config("llama3.1-8b")
+
+
+def _grid_qkv(sl, cfg):    # GEMM tiles: (sl/128) x ((h+2k)·dh/128)
+    return math.ceil(sl / 128) * math.ceil(
+        (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim / 128)
+
+
+def _grid_attn(sl, cfg):   # flash tiles: heads x q-blocks
+    return cfg.n_heads * math.ceil(sl / 128)
+
+
+def _grid_oproj(sl, cfg):
+    return math.ceil(sl / 128) * math.ceil(cfg.d_model / 128)
+
+
+def _grid_mlp(sl, cfg):
+    return math.ceil(sl / 128) * math.ceil(2 * cfg.d_ff / 128)
+
+
+def run(emit) -> None:
+    emit("# table1: seq_len,device,qkv_idle%,attn_idle%,oproj_idle%,"
+         "mlp_idle%,total_idle%")
+    for device, slots in (("a100-108sm", 108), ("v5e-4chip", 32)):
+        for sl in (256, 512, 1024, 2048, 4096, 16384):
+            parts = {
+                "qkv": _grid_qkv(sl, CFG),
+                "attn": _grid_attn(sl, CFG),
+                "oproj": _grid_oproj(sl, CFG),
+                "mlp": _grid_mlp(sl, CFG),
+            }
+            idles = {k: 100 * wave_quantization_idle(g, slots)
+                     for k, g in parts.items()}
+            total = sum(idles.values()) / len(idles)
+            emit(f"table1,{sl},{device},{idles['qkv']:.1f},"
+                 f"{idles['attn']:.1f},{idles['oproj']:.1f},"
+                 f"{idles['mlp']:.1f},{total:.1f}")

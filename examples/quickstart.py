@@ -1,0 +1,67 @@
+"""Quickstart: serve a tiny model end-to-end through the Bullet runtime.
+
+Runs on CPU in under a minute: builds a reduced qwen3-family model, submits
+a handful of requests, and shows the concurrent-engine statistics (layer-
+group prefill cycles, decode iterations, instant resource re-configs,
+copy-free migrations).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import BulletServer
+from repro.models import init_params, param_count
+from repro.serving.request import Request, SLO
+
+
+def main():
+    cfg = get_config("qwen3-1.7b").reduced()
+    print(f"model: {cfg.name} ({param_count_str(cfg)})")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    server = BulletServer(cfg, params, slo=SLO(norm_ttft_ms=3.0,
+                                               tpot_ms=150.0),
+                          max_slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    print("\nsubmitting 8 requests...")
+    for rid in range(8):
+        plen = int(rng.integers(4, 24))
+        prompt = rng.integers(0, cfg.vocab_size, plen)
+        server.submit(Request(rid=rid, arrival=0.0, prompt_len=plen,
+                              output_len=8), prompt)
+
+    outputs = server.run()
+    for rid, toks in sorted(outputs.items()):
+        print(f"  request {rid}: generated {toks}")
+
+    s = server.stats
+    print(f"\nengine stats: {s.prefill_cycles} prefill layer-group cycles, "
+          f"{s.decode_iterations} decode iterations, "
+          f"{s.migrated} copy-free migrations, "
+          f"{s.reconfigs} resource re-configurations")
+    lat = server.rm.switch_latencies
+    print(f"re-config latency (Table 3): median "
+          f"{sorted(lat)[len(lat)//2]*1e6:.1f} µs over {len(lat)} switches")
+    server.pool.check_invariants()
+    print("KV pool invariants hold; all blocks returned:",
+          server.pool.free_blocks == server.pool.n_blocks)
+
+
+def param_count_str(cfg):
+    import jax
+    from repro.models import init_params as ip
+    n = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda k: ip(cfg, k), jax.random.PRNGKey(0))))
+    return f"{n/1e6:.1f}M params"
+
+
+if __name__ == "__main__":
+    main()

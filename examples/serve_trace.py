@@ -1,0 +1,53 @@
+"""Serve a real-world-shaped trace: Bullet vs chunked prefill (paper Fig. 11).
+
+Profiles the hardware surrogate, fits the Bullet performance estimator
+(§3.2.2), then serves the same ShareGPT-shaped Poisson trace through the
+Bullet orchestrator and a SGLang-style chunked-prefill baseline.
+
+    PYTHONPATH=src python examples/serve_trace.py [rate_req_s]
+"""
+
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+from repro.core.profiler import SurrogateMachine, run_profiling
+from repro.core.simulate import SimConfig, ServingSimulator
+from repro.serving.request import WORKLOAD_SLOS
+from repro.serving.workload import generate_trace
+
+
+def main():
+    rate = float(sys.argv[1]) if len(sys.argv) > 1 else 40.0
+    cfg = get_config("llama3.1-8b")
+    hw = HardwareSpec(n_chips=2)
+    print(f"serving {cfg.name} on {hw.n_chips}x v5e "
+          f"({hw.total_units} resource units), ShareGPT @ {rate} req/s")
+
+    print("offline profiling + fit (§3.2.2)...")
+    samples = run_profiling(cfg, hw, max_sl=4096, max_bs=32, max_cl=4096)
+    est = PerfEstimator(hw, fit_params(samples, cfg, hw, iters=30))
+    print(f"  {len(samples)} profile points; fitted {est.params}")
+
+    slo = WORKLOAD_SLOS["sharegpt"]
+    sim = SimConfig(model=cfg, hw=hw, slo=slo)
+    print(f"SLO: norm TTFT <= {slo.norm_ttft_ms} ms/token, "
+          f"TPOT <= {slo.tpot_ms} ms\n")
+    header = (f"{'system':16s} {'TTFT':>9s} {'p90TTFT':>9s} {'TPOT':>8s} "
+              f"{'thr tok/s':>10s} {'goodput':>8s}")
+    print(header)
+    for system in ("bullet", "chunked-1024", "chunked-2048",
+                   "bullet-fix16", "naive"):
+        trace = generate_trace("sharegpt", rate_req_s=rate,
+                               duration_s=30.0, seed=1)
+        s = ServingSimulator(sim, est, SurrogateMachine(hw, seed=7), system)
+        m = s.run(trace)
+        print(f"{system:16s} {m.mean_ttft_s*1e3:8.1f}ms "
+              f"{m.p90_ttft_s*1e3:8.1f}ms {m.mean_tpot_ms:7.1f}ms "
+              f"{m.throughput_tok_s:10.0f} {m.goodput*100:7.1f}%")
+
+
+if __name__ == "__main__":
+    main()

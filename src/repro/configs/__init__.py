@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ATTN, SWA, RGLRU, SSD, MLP, MOE,
+    BlockSpec, InputShape, ModelConfig, INPUT_SHAPES,
+    get_config, list_configs, register,
+)
+
+#: the ten assigned architectures (plus the paper's own model llama3.1-8b)
+ASSIGNED_ARCHS = (
+    "recurrentgemma-2b",
+    "llama4-maverick-400b-a17b",
+    "seamless-m4t-large-v2",
+    "mamba2-2.7b",
+    "codeqwen1.5-7b",
+    "granite-3-2b",
+    "qwen1.5-4b",
+    "qwen3-1.7b",
+    "mixtral-8x22b",
+    "internvl2-76b",
+)

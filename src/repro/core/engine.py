@@ -1,0 +1,296 @@
+"""Concurrent execution engine (paper §3.5) — real-model execution path.
+
+Two engine objects (prefill, decode) share a MetadataBuffer and a unified
+KV pool, each running a decentralized scheduling loop:
+
+- The **prefill engine** launches one *pattern-repeat group* of layers per
+  cycle (the paper's layer-group launches), consulting the SLO scheduler
+  between groups; a finished prompt migrates to decode by page-table /
+  slot-index handoff only.
+- The **decode engine** runs one continuous-batching iteration per cycle
+  through a single pre-compiled step function (the CUDA-Graph analogue:
+  one jit executable reused every iteration), reading global state from
+  the shared buffer first.
+
+On-device caches are a fixed-slot dense pool ((R, slots, S, K, D) per
+pattern position) written in place via donation — the functional analogue
+of the cudaIpc shared pool (admission bookkeeping lives in
+kvcache.PagedKVPool). JAX async dispatch lets the host run scheduling while
+the device executes, mirroring the paper's decoupled CPU/GPU control flow.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.estimator import PerfEstimator
+from repro.core.metadata import MetadataBuffer, ResourceStatus
+from repro.core.resource import ResourceManager
+from repro.core.scheduler import SchedulerConfig, SLOScheduler
+from repro.kvcache.paged import PagedKVPool
+from repro.models import transformer as T
+from repro.serving.request import Phase, Request, SLO
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions (compiled once, reused — §3.4.2 pre-configured states)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "repeat"),
+                   donate_argnums=(3,))
+def _prefill_group(params_slice, x, positions, cache_slice, lengths, *,
+                   cfg: ModelConfig, repeat: int):
+    """Run one pattern-repeat group of layers over the prompt batch."""
+    del repeat
+    new_entries = []
+    for j, blk in enumerate(cfg.pattern):
+        x, entry, _ = T._apply_block_full(
+            x, params_slice[j], blk, cfg, None, positions, None)
+        entry = T._prefill_cache_entry(entry, blk, cfg, lengths,
+                                       cache_slice[j], False)
+        new_entries.append(entry)
+    return x, tuple(new_entries)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def _decode_iteration(params, cache, tokens, pos, active, *,
+                      cfg: ModelConfig):
+    """One continuous-batching decode iteration over all slots; inactive
+    slots are masked out of the sampled tokens."""
+    logits, cache = T.decode_step(params, cache, tokens, pos, cfg)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    next_tokens = jnp.where(active, next_tokens, 0)
+    return next_tokens[:, None], cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _embed_prompt(params, tokens, *, cfg: ModelConfig):
+    return T.embed_tokens(params, tokens, cfg, None)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _final_logits(params, x, lengths, *, cfg: ModelConfig):
+    from repro.models import layers as L
+    x = L.rms_norm(x, params["final_norm"], cfg.rmsnorm_eps)
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = T.lm_logits(params, last[:, None], cfg, None)[:, 0]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slot(cache_leaf, src_leaf, slot):
+    """Copy one request's prefill cache row into its decode slot."""
+    return jax.lax.dynamic_update_index_in_dim(
+        cache_leaf, src_leaf, slot, axis=1)
+
+
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineStats:
+    prefill_cycles: int = 0
+    decode_iterations: int = 0
+    reconfigs: int = 0
+    paused_cycles: int = 0
+    migrated: int = 0
+
+
+class BulletServer:
+    """Single-host Bullet serving runtime over a real JAX model."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slo: SLO,
+                 est: Optional[PerfEstimator] = None,
+                 max_slots: int = 8, max_len: int = 128,
+                 max_prefill_batch: int = 4,
+                 sched: SchedulerConfig = SchedulerConfig(),
+                 dtype=jnp.float32):
+        if cfg.pattern_tail:
+            raise NotImplementedError(
+                "BulletServer's layer-group loop does not handle "
+                "pattern_tail configs; use a homogeneous-pattern model")
+        self.cfg = cfg
+        self.params = params
+        self.slo = slo
+        self.est = est or PerfEstimator()
+        self.buffer = MetadataBuffer()
+        self.scheduler = SLOScheduler(cfg, self.est, slo, sched)
+        self.rm = ResourceManager(self.est.hw, sched.unit_quantum)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.max_prefill_batch = max_prefill_batch
+        self.stats = EngineStats()
+        # unified device cache pool: one decode slot per request
+        self.cache = T.init_cache(cfg, max_slots, max_len, dtype)
+        self.pool = PagedKVPool(max_slots * max_len, block_size=16)
+        # slot bookkeeping
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
+        self.pos = jnp.zeros((max_slots,), jnp.int32)
+        self.active = jnp.zeros((max_slots,), bool)
+        self.pending: List[Request] = []
+        self.finished: List[Request] = []
+        self.outputs: Dict[int, List[int]] = {}
+
+    # -- request ingress ------------------------------------------------
+    def submit(self, req: Request, prompt_tokens: np.ndarray):
+        req.phase = Phase.QUEUED
+        req._prompt = np.asarray(prompt_tokens, np.int32)   # type: ignore
+        self.pending.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    # -- engines ----------------------------------------------------------
+    def _prefill_cycle(self, now: float) -> bool:
+        """Admit + run one full prefill (repeat-group granular). Returns
+        True if work was done."""
+        batch: List[Request] = []
+        while (self.pending and len(batch) < self.max_prefill_batch
+               and self._free_slot() is not None):
+            r = self.pending[0]
+            if not self.pool.can_admit(r.prompt_len + r.output_len):
+                break
+            slot = self._free_slot()
+            self.pool.allocate(r.rid, r.prompt_len)
+            r.prefill_start = now
+            r.phase = Phase.PREFILL
+            batch.append(self.pending.pop(0))
+            self.slot_req[slot] = batch[-1]
+            batch[-1]._slot = slot                          # type: ignore
+        if not batch:
+            return False
+
+        plen = max(r.prompt_len for r in batch)
+        toks = np.zeros((len(batch), plen), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, :r.prompt_len] = r._prompt[:plen]       # type: ignore
+        lengths = jnp.asarray([r.prompt_len for r in batch])
+        x = _embed_prompt(self.params, jnp.asarray(toks), cfg=self.cfg)
+        positions = jnp.arange(plen)[None, :]
+
+        # temporary per-batch cache (migrated slot-wise afterwards)
+        tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
+                                 jax.tree.leaves(self.cache)[0].dtype)
+        entries = []
+        for rep in range(self.cfg.n_pattern_repeats):
+            # ---- scheduling cycle between layer groups (§3.3.1) -------
+            state = self.buffer.read()
+            decision = self.scheduler.schedule(
+                state, now, [(r.rid, r.arrival, r.prompt_len)
+                             for r in self.pending])
+            part = self.rm.switch(decision.resources)
+            self.stats.reconfigs += 1
+            self.buffer.write(lambda s: setattr(
+                s.resources, "prefill_units", part.prefill_units))
+            p_slice = jax.tree.map(lambda a: a[rep], self.params["blocks"],
+                                   is_leaf=lambda a: hasattr(a, "shape"))
+            c_slice = jax.tree.map(lambda a: a[rep], tmp_cache["blocks"],
+                                   is_leaf=lambda a: hasattr(a, "shape"))
+            x, new_entries = _prefill_group(
+                p_slice, x, positions, c_slice, lengths,
+                cfg=self.cfg, repeat=rep)
+            entries.append(new_entries)
+            self.stats.prefill_cycles += 1
+            P = self.buffer.state.prefill
+            P.layers_done = (rep + 1) * len(self.cfg.pattern)
+            P.total_layers = self.cfg.n_layers
+            P.n_tokens = int(lengths.sum())
+
+        first_tokens = _final_logits(self.params, x, lengths, cfg=self.cfg)
+        first_tokens = np.asarray(first_tokens)
+
+        # ---- migrate to decode: write cache rows into slots (handoff) --
+        for i, r in enumerate(batch):
+            slot = r._slot                                  # type: ignore
+            for j in range(len(self.cfg.pattern)):
+                for key in self.cache["blocks"][j]:
+                    stacked = jnp.stack([entries[rep][j][key][i]
+                                         for rep in range(len(entries))])
+                    self.cache["blocks"][j][key] = _write_slot(
+                        self.cache["blocks"][j][key], stacked, slot)
+            r.phase = Phase.DECODE
+            r.first_token_time = time.perf_counter()
+            r.generated = 1
+            self.outputs[r.rid] = [int(first_tokens[i])]
+            self.tokens = self.tokens.at[slot, 0].set(int(first_tokens[i]))
+            self.pos = self.pos.at[slot].set(r.prompt_len)
+            self.active = self.active.at[slot].set(True)
+            self.pool.migrate(r.rid)
+            self.stats.migrated += 1
+            self.buffer.write(lambda s, rid=r.rid: s.ready_for_decode.append(
+                (rid, self.outputs[rid][0])))
+        return True
+
+    def _decode_cycle(self, now: float) -> bool:
+        if not bool(np.any(np.asarray(self.active))):
+            return False
+        # ---- scheduling cycle before the iteration (§3.3.1) ------------
+        state = self.buffer.read()
+        decision = self.scheduler.schedule(
+            state, now, [(r.rid, r.arrival, r.prompt_len)
+                         for r in self.pending])
+        if decision.pause_decode:
+            self.stats.paused_cycles += 1
+            return False
+        part = self.rm.switch(decision.resources)
+        self.buffer.write(lambda s: setattr(
+            s.resources, "decode_units", part.decode_units))
+
+        next_tokens, self.cache = _decode_iteration(
+            self.params, self.cache, self.tokens, self.pos, self.active,
+            cfg=self.cfg)
+        self.tokens = next_tokens
+        self.pos = self.pos + np.asarray(self.active).astype(np.int32)
+        self.stats.decode_iterations += 1
+        nt = np.asarray(next_tokens)[:, 0]
+
+        D = self.buffer.state.decode
+        for slot, r in enumerate(self.slot_req):
+            if r is None or r.phase != Phase.DECODE:
+                continue
+            self.outputs[r.rid].append(int(nt[slot]))
+            r.generated += 1
+            self.pool.extend(r.rid, 1)
+            D.out_tokens[r.rid] = r.generated
+            D.decode_time[r.rid] = now - (r.first_token_time or now)
+            if (r.generated >= r.output_len
+                    or r.prompt_len + r.generated >= self.max_len):
+                r.phase = Phase.FINISHED
+                r.finish_time = time.perf_counter()
+                self.finished.append(r)
+                self.pool.free(r.rid)
+                self.slot_req[slot] = None
+                self.active = self.active.at[slot].set(False)
+                D.batch = [x.rid for x in self.slot_req
+                           if x is not None and x.phase == Phase.DECODE]
+        D.batch = [x.rid for x in self.slot_req
+                   if x is not None and x.phase == Phase.DECODE]
+        return True
+
+    # -- main loop --------------------------------------------------------
+    def run(self, max_cycles: int = 10_000) -> Dict[int, List[int]]:
+        """Drive both engines until all submitted requests finish."""
+        t0 = time.perf_counter()
+        cycles = 0
+        while cycles < max_cycles:
+            cycles += 1
+            now = time.perf_counter() - t0
+            did_p = self._prefill_cycle(now)
+            did_d = self._decode_cycle(now)
+            if not did_p and not did_d and not self.pending:
+                if all(r is None for r in self.slot_req):
+                    break
+        self.pool.check_invariants()
+        return self.outputs

@@ -1,0 +1,89 @@
+"""Computational resource manager (paper §3.4).
+
+GPU Bullet pre-creates CUDA streams with libsmctrl SM masks and switches
+among them in ~4 µs. The TPU analogue keeps a table of *pre-configured
+execution states*:
+
+- at tile granularity: one jitted step function per quantized
+  ``decode_share`` of the fused bullet_attention schedule;
+- at chip granularity: one pjit executable per (prefill sub-mesh, decode
+  sub-mesh) split.
+
+"Re-configuration" is a dict lookup — measured in benchmarks/overheads.py
+(Table 3 'Resource Re-config'). Non-strict isolation (paper Fig. 8b's
+overlapping masks) maps to decode_share values whose tile streams share
+grid slots.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.estimator import HardwareSpec
+from repro.core.metadata import ResourceStatus
+
+
+@dataclass(frozen=True)
+class PartitionConfig:
+    """One pre-configured spatial-temporal partition."""
+    config_id: int
+    prefill_units: int
+    decode_units: int
+
+    @property
+    def decode_share(self) -> float:
+        tot = self.prefill_units + self.decode_units
+        return self.decode_units / tot if tot else 0.0
+
+
+def default_partitions(hw: HardwareSpec, quantum: int = 2
+                       ) -> List[PartitionConfig]:
+    """The pre-created partition table (paper Fig. 8b): every quantized
+    split including prefill-only and decode-only."""
+    U = hw.total_units
+    out = []
+    cid = 0
+    for u in range(0, U + 1, quantum):
+        out.append(PartitionConfig(cid, u, U - u))
+        cid += 1
+    return out
+
+
+class ResourceManager:
+    """Holds pre-built execution states; instant switching."""
+
+    def __init__(self, hw: HardwareSpec, quantum: int = 2,
+                 builder: Optional[Callable[[PartitionConfig], object]] = None):
+        self.hw = hw
+        self.quantum = quantum
+        self.partitions = default_partitions(hw, quantum)
+        self._by_units: Dict[Tuple[int, int], PartitionConfig] = {
+            (p.prefill_units, p.decode_units): p for p in self.partitions}
+        self._exec: Dict[int, object] = {}
+        self._builder = builder
+        self.current: PartitionConfig = self.partitions[len(self.partitions) // 2]
+        self.switch_latencies: List[float] = []
+        if builder is not None:
+            for p in self.partitions:
+                self._exec[p.config_id] = builder(p)
+
+    def nearest(self, res: ResourceStatus) -> PartitionConfig:
+        """Quantize an arbitrary (u, v) request onto the partition table."""
+        U = self.hw.total_units
+        u = max(0, min(U, res.prefill_units))
+        u = round(u / self.quantum) * self.quantum
+        return self._by_units[(u, U - u)]
+
+    def switch(self, res: ResourceStatus) -> PartitionConfig:
+        """Instant re-configuration (Table 3): a table lookup."""
+        t0 = time.perf_counter()
+        cfg = self.nearest(res)
+        self.current = cfg
+        self.switch_latencies.append(time.perf_counter() - t0)
+        return cfg
+
+    def executable(self, cfg: Optional[PartitionConfig] = None):
+        cfg = cfg or self.current
+        return self._exec.get(cfg.config_id)

@@ -1,0 +1,233 @@
+"""SLO-aware task scheduler (paper §3.3, Algorithm 1).
+
+Each scheduling cycle (one prefill layer-group / one decode iteration):
+
+1. Track progress: estimate remaining prefill time, per-request TTFT,
+   queueing delays, and decode TPOTs (lines 2-10).
+2. Pick the resource move (lines 11-18):
+     both SLOs met            → ReduceDecodeSM   (free units for prefill /
+                                 throughput, the paper's prefill-priority)
+     both violated            → SetBalancedSM
+     TPOT violated only       → ReducePrefillSM
+     TTFT violated only       → ReduceDecodeSM (may pause decode entirely,
+                                 §3.3.3 "temporarily borrow")
+3. Return the new ResourceStatus; the resource manager (resource.py) swaps
+   to the matching pre-configured partition.
+
+Units are the TPU resource quanta of estimator.HardwareSpec (chips × grid
+interleave slots); ``unit_quantum`` mirrors libsmctrl's 2-SM granularity.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.estimator import PerfEstimator
+from repro.core.metadata import SystemState, ResourceStatus
+from repro.serving.request import SLO, percentile
+
+
+@dataclass
+class SchedulerConfig:
+    unit_quantum: int = 2            # allocation granularity (2 SMs / 2 units)
+    min_decode_units: int = 2        # v_min
+    min_prefill_units: int = 2
+    layer_group: int = 1             # layers launched per scheduling cycle
+    p_quantile: float = 90.0
+    max_decode_pause_cycles: int = 48  # bound decode starvation (W_max)
+    #: fraction of the TPOT SLO the search targets — headroom so that
+    #: transiently slow iterations cannot poison the cumulative per-request
+    #: TPOT (the paper's "estimating delays each step to prevent future
+    #: violations")
+    tpot_margin: float = 0.6
+    ttft_margin: float = 0.8
+
+
+@dataclass
+class Decision:
+    resources: ResourceStatus
+    pause_decode: bool = False
+    reorder: Optional[List[int]] = None      # new pending-queue order
+    reason: str = ""
+
+
+class SLOScheduler:
+    """Decentralized scheduler instance (one per engine, sharing state)."""
+
+    def __init__(self, cfg: ModelConfig, est: PerfEstimator, slo: SLO,
+                 sched: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.est = est
+        self.slo = slo
+        self.sc = sched
+        self.decode_paused_cycles = 0
+
+    # -- progress tracking (Algorithm 1 lines 2-10) -------------------
+    def estimate_ttfts(self, state: SystemState, now: float,
+                       pending: List[Tuple[int, float, int]]) -> Dict[int, float]:
+        """Estimated TTFT (ms, normalized per prompt token) for the active
+        prefill and all pending requests [(rid, arrival, prompt_len)]."""
+        P, R = state.prefill, state.resources
+        colocated = state.decode.n_d > 0 and not state.decode.paused
+        out: Dict[int, float] = {}
+        rem_layers = max(P.total_layers - P.layers_done, 0)
+        per_layer = self.est.prefill_layer_time(
+            self.cfg, max(P.n_tokens, 1), 0, max(R.prefill_units, 1),
+            colocated=colocated)
+        rem_time = per_layer * rem_layers
+        if P.active_rid is not None:
+            elapsed = now - P.started_at
+            q = P.queue_wait.get(P.active_rid, 0.0)
+            out[P.active_rid] = (q + elapsed + rem_time) * 1e3 / max(P.n_tokens, 1)
+        # pending requests queue behind the active prefill (line 5-7)
+        t_ahead = rem_time
+        for rid, arrival, plen in pending:
+            t_pre = self.est.prefill_time(self.cfg, plen,
+                                          max(R.prefill_units, 1),
+                                          colocated=colocated)
+            waited = now - arrival
+            out[rid] = (waited + t_ahead + t_pre) * 1e3 / max(plen, 1)
+            t_ahead += t_pre
+        return out
+
+    def observed_tpots(self, state: SystemState) -> Dict[int, float]:
+        D = state.decode
+        return {rid: D.tpot(rid) * 1e3 for rid in D.batch}
+
+    def predicted_tpot_ms(self, state: SystemState, units: int) -> float:
+        D = state.decode
+        if D.n_d == 0:
+            return 0.0
+        colocated = state.prefill.active_rid is not None
+        return 1e3 * self.est.decode_iter_time(
+            self.cfg, D.n_d, max(D.mean_context, 1), max(units, 1),
+            colocated=colocated)
+
+    # -- search moves (Algorithm 1 lines 11-18 + Algorithm 2) ----------
+    def _quantize(self, units: int) -> int:
+        q = self.sc.unit_quantum
+        return max(q, (units // q) * q)
+
+    def _pause_ok(self, state: SystemState, dt_pause: float) -> bool:
+        """Is delaying decode by ``dt_pause`` seconds safe for every
+        in-flight request's *cumulative* TPOT (§3.3.3 borrow)?"""
+        D = state.decode
+        if not D.batch:
+            return False
+        proj = [1e3 * (D.decode_time.get(r, 0.0) + dt_pause)
+                / max(D.out_tokens.get(r, 1), 1) for r in D.batch]
+        return (percentile(proj, self.sc.p_quantile)
+                < self.sc.tpot_margin * self.slo.tpot_ms)
+
+    def _reduce_decode(self, state: SystemState, total: int, *,
+                       ttft_violated: bool = False) -> Decision:
+        """Shift units decode→prefill while the *predicted* TPOT stays under
+        tpot_margin·SLO (Algorithm 2's step-wise search, v → v_min); in the
+        TTFT-violated branch, if v_min still cannot rescue TTFT while TPOT
+        has slack, temporarily pause decode (§3.3.3 "borrow")."""
+        target = self.sc.tpot_margin * self.slo.tpot_ms
+        n_tok = max(state.prefill.n_tokens, 1)
+        colocated = state.decode.n_d > 0
+
+        # Algorithm 2: walk candidate splits, *estimating* both phases at
+        # each step — maximizing prefill units is NOT monotone in prefill
+        # speed because of Eq. 1 tail waves (tile count vs. slot count).
+        best_v, best_t = None, float("inf")
+        v = self.sc.min_decode_units
+        while v <= total - self.sc.min_prefill_units:
+            if (not state.decode.n_d or
+                    self.predicted_tpot_ms(state, v) <= target):
+                t_p = self.est.prefill_layer_time(
+                    self.cfg, n_tok, 0, total - v, colocated=colocated)
+                # prefer more decode units at equal prefill speed
+                if t_p < best_t * 0.999 or (abs(t_p - best_t) <= best_t * 1e-3
+                                            and best_v is not None and v > best_v):
+                    best_v, best_t = v, min(t_p, best_t)
+            v += self.sc.unit_quantum
+        if best_v is None:          # no split satisfies TPOT: give decode all
+            best_v = total - self.sc.min_prefill_units
+        v = self._quantize(best_v)
+        u = total - v
+
+        # §3.3.3 borrow: while a prefill is resident, running it exclusively
+        # (no contention, full units) beats any co-run split as long as the
+        # projected cumulative TPOTs keep their margin. Bounded by
+        # max_decode_pause_cycles so decode always makes progress.
+        pause = False
+        if state.prefill.n_tokens > 0 and state.decode.n_d:
+            dt_pause = self.est.prefill_layer_time(
+                self.cfg, n_tok, 0, total,
+                colocated=False) * self.sc.layer_group
+            exclusive_gain = best_t / max(self.est.prefill_layer_time(
+                self.cfg, n_tok, 0, total, colocated=False), 1e-12)
+            if (exclusive_gain > 1.02 and self._pause_ok(state, dt_pause) and
+                    self.decode_paused_cycles < self.sc.max_decode_pause_cycles):
+                pause = True
+                u, v = total, 0
+        return Decision(ResourceStatus(u, v), pause_decode=pause,
+                        reason="reduce_decode")
+
+    def _reduce_prefill(self, state: SystemState, total: int) -> Decision:
+        u = state.resources.prefill_units or total // 2
+        u = max(self.sc.min_prefill_units,
+                self._quantize(u - 2 * self.sc.unit_quantum))
+        return Decision(ResourceStatus(u, total - u), reason="reduce_prefill")
+
+    def _balanced(self, state: SystemState, total: int) -> Decision:
+        """Split proportionally to estimated phase demand (both violated)."""
+        P, D = state.prefill, state.decode
+        t_p = self.est.prefill_time(self.cfg, max(P.n_tokens, 1), total,
+                                    colocated=True)
+        t_d = self.est.decode_iter_time(self.cfg, max(D.n_d, 1),
+                                        max(D.mean_context, 1), total,
+                                        colocated=True)
+        frac = t_p / max(t_p + t_d, 1e-9)
+        u = self._quantize(int(total * frac))
+        u = min(max(u, self.sc.min_prefill_units),
+                total - self.sc.min_decode_units)
+        return Decision(ResourceStatus(u, total - u), reason="balanced")
+
+    # -- main entry (Algorithm 1) --------------------------------------
+    def schedule(self, state: SystemState, now: float,
+                 pending: List[Tuple[int, float, int]]) -> Decision:
+        total = self.est.hw.total_units
+        ttfts = self.estimate_ttfts(state, now, pending)
+        tpots = self.observed_tpots(state)
+
+        # reorder pending by estimated slack (line 7 "sort")
+        order = sorted(
+            (rid for rid, _, _ in pending),
+            key=lambda rid: self.slo.norm_ttft_ms - ttfts.get(rid, 0.0))
+
+        q = self.sc.p_quantile
+        # proactive: act before the estimate actually crosses the SLO
+        ttft_vio = (bool(ttfts) and percentile(list(ttfts.values()), q)
+                    > self.sc.ttft_margin * self.slo.norm_ttft_ms)
+        tpot_vio = (bool(tpots) and
+                    percentile(list(tpots.values()), q) > self.slo.tpot_ms)
+
+        if not ttft_vio and not tpot_vio:
+            d = self._reduce_decode(state, total)         # line 11-12
+        elif ttft_vio and tpot_vio:
+            d = self._balanced(state, total)              # line 13-14
+        elif tpot_vio:
+            d = self._reduce_prefill(state, total)        # line 15-16
+        else:
+            d = self._reduce_decode(state, total,         # line 17-18
+                                    ttft_violated=True)
+        d.reorder = order
+        if d.pause_decode:
+            self.decode_paused_cycles += 1
+        else:
+            self.decode_paused_cycles = 0
+        # nothing to prefill -> give decode everything
+        if state.prefill.active_rid is None and not pending:
+            d = Decision(ResourceStatus(0, total), reorder=order,
+                         reason="decode_only")
+        if state.decode.n_d == 0 and not d.pause_decode:
+            d = Decision(ResourceStatus(total, 0), reorder=order,
+                         reason="prefill_only")
+        return d

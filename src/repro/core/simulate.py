@@ -1,0 +1,397 @@
+"""Estimator-driven discrete-event serving simulator.
+
+Runs Bullet and the chunked-prefill / static-partition / naive baselines on
+identical workload traces with TPU v5e constants — the evaluation harness
+behind the paper's Figs. 11-14 (DESIGN.md §3 explains why simulation rather
+than wall clock in this container). The same PerfEstimator the Bullet
+scheduler uses for decisions drives the simulation clock, with the *hidden
+surrogate* parameters as ground truth, so scheduling decisions are made with
+the fitted (imperfect) model against "real" (surrogate) durations — exactly
+the paper's estimation-error regime.
+
+Systems:
+  bullet        — concurrent phases, SLO scheduler, dynamic partitions
+  bullet-fixN   — static partition of N prefill units (paper Fig. 13)
+  bullet-nosched— partitioning but FCFS, no reorder/pause (Fig. 14 w/Part.)
+  bullet-nopart — scheduler but full-GPU contention (Fig. 14 w/Sched.)
+  naive         — concurrent, no partitioning, no scheduling (Fig. 14)
+  chunked-N     — chunked prefill with token budget N (vLLM/SGLang-style)
+  nanoflow-N    — chunked with nano-batch pipeline overlap (paper §2.4)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.estimator import HardwareSpec, PerfEstimator
+from repro.core.metadata import SystemState
+from repro.core.profiler import SurrogateMachine
+from repro.core.scheduler import Decision, SchedulerConfig, SLOScheduler
+from repro.core.resource import ResourceManager
+from repro.core.metadata import ResourceStatus
+from repro.serving.request import Phase, Request, ServingMetrics, SLO
+
+
+@dataclass
+class SimConfig:
+    model: ModelConfig
+    hw: HardwareSpec
+    slo: SLO
+    kv_budget_tokens: int = 400_000
+    max_decode_batch: int = 256
+    max_prefill_tokens: int = 8192      # prefill engine batch cap (n_p)
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
+
+
+@dataclass
+class SimLogEntry:
+    t: float
+    prefill_units: int
+    decode_units: int
+    n_decode: int
+    n_waiting: int
+    prefill_tokens: int
+
+
+class _EngineClock:
+    """Event times for the two concurrent engines."""
+
+    def __init__(self):
+        self.prefill_free = 0.0
+        self.decode_free = 0.0
+
+
+class ServingSimulator:
+    def __init__(self, sim: SimConfig, est: PerfEstimator,
+                 truth: SurrogateMachine, system: str = "bullet"):
+        self.sim = sim
+        self.est = est                       # what the scheduler believes
+        self.truth = truth                   # what "actually" happens
+        self.system = system
+        self.log: List[SimLogEntry] = []
+        self.pred_actual: List[Tuple[str, float, float]] = []
+
+    # ------------------------------------------------------------------
+    def run(self, trace: List[Request], *, log_timeline: bool = False,
+            max_time: float = 1e9) -> ServingMetrics:
+        if self.system.startswith("chunked"):
+            budget = int(self.system.split("-")[1])
+            self._run_chunked(trace, budget, max_time)
+        elif self.system.startswith("nanoflow"):
+            budget = int(self.system.split("-")[1])
+            self._run_chunked(trace, budget, max_time, overlap=True)
+        else:
+            self._run_concurrent(trace, max_time, log_timeline)
+        return ServingMetrics.from_requests(trace, self.sim.slo)
+
+    # ------------------------------------------------------------------
+    # Concurrent (Bullet and its ablations)
+    # ------------------------------------------------------------------
+    def _mode_flags(self):
+        sys = self.system
+        dynamic = sys == "bullet"
+        partition = sys != "bullet-nopart" and sys != "naive"
+        sched = sys in ("bullet", "bullet-nopart")
+        fixed_units = None
+        if sys.startswith("bullet-fix"):
+            fixed_units = int(sys.replace("bullet-fix", ""))
+        return dynamic, partition, sched, fixed_units
+
+    def _run_concurrent(self, trace: List[Request], max_time: float,
+                        log_timeline: bool):
+        """Two-engine discrete-event loop.
+
+        Each engine launches work under the *current* partition; in-flight
+        work keeps the resources it was launched with (kernels already
+        submitted). A scheduling cycle runs at every completion event —
+        per-layer-group for prefill, per-iteration for decode (§3.3.1).
+        """
+        cfg, hw, slo = self.sim.model, self.sim.hw, self.sim.slo
+        dynamic, partition, sched_on, fixed_units = self._mode_flags()
+        scheduler = SLOScheduler(cfg, self.est, slo, self.sim.scheduler)
+        rm = ResourceManager(hw, self.sim.scheduler.unit_quantum)
+        state = SystemState()
+        U = hw.total_units
+        if fixed_units is not None:
+            state.resources = ResourceStatus(fixed_units, U)
+        elif not partition:
+            state.resources = ResourceStatus(U, U)
+        else:
+            state.resources = ResourceStatus(U // 2, U - U // 2)
+
+        pending: List[Request] = []
+        decoding: List[Request] = []
+        arrivals = sorted(trace, key=lambda r: r.arrival)
+        ai = 0
+        t = 0.0
+        active: List[Request] = []           # prefill batch (n_p = sum lens)
+        active_tokens = 0
+        active_layer = 0
+        kv_tokens = 0
+        # in-flight work: (end_time, meta)
+        pf_end: Optional[float] = None
+        dec_end: Optional[float] = None
+        dec_started: float = 0.0
+        pause_decode = False
+        steps = 0
+
+        def admit(now):
+            nonlocal ai
+            while ai < len(arrivals) and arrivals[ai].arrival <= now:
+                pending.append(arrivals[ai])
+                ai += 1
+
+        def sync_state(now):
+            P, D = state.prefill, state.decode
+            P.active_rid = active[0].rid if active else None
+            P.layers_done = active_layer
+            P.total_layers = cfg.n_layers
+            P.n_tokens = active_tokens
+            P.started_at = active[0].prefill_start if active else now
+            P.n_waiting = len(pending)
+            D.batch = [r.rid for r in decoding]
+            D.mean_context = (int(sum(r.prompt_len + r.generated
+                                      for r in decoding) / len(decoding))
+                              if decoding else 0)
+            for r in decoding:
+                D.out_tokens[r.rid] = r.generated
+                # wall-clock decode time (pauses included) so the
+                # scheduler's cumulative-TPOT projections are honest
+                D.decode_time[r.rid] = max(
+                    0.0, now - (r.first_token_time or now))
+
+        def run_cycle(now):
+            nonlocal pause_decode
+            sync_state(now)
+            if not sched_on and not dynamic:
+                return
+            d = scheduler.schedule(
+                state, now, [(r.rid, r.arrival, r.prompt_len)
+                             for r in pending])
+            if dynamic:
+                part = rm.switch(d.resources)
+                state.resources = ResourceStatus(part.prefill_units,
+                                                 part.decode_units)
+            elif not partition:
+                state.resources = ResourceStatus(U, U)
+            if sched_on:
+                pause_decode = d.pause_decode
+                if d.reorder:
+                    order = {rid: i for i, rid in enumerate(d.reorder)}
+                    pending.sort(key=lambda r: order.get(r.rid, 1e9))
+            else:
+                pause_decode = False
+
+        while True:
+            steps += 1
+            if steps > 5_000_000:
+                raise RuntimeError("simulator runaway")
+            admit(t)
+            if (ai >= len(arrivals) and not active and not pending
+                    and not decoding):
+                break
+            if t > max_time:
+                break
+
+            colocated = bool(active) and len(decoding) > 0
+
+            # launch prefill layer group if engine idle
+            if pf_end is None:
+                if not active and pending:
+                    run_cycle(t)
+                    while (pending and (not active or
+                           active_tokens + pending[0].prompt_len
+                           <= self.sim.max_prefill_tokens)):
+                        r = pending.pop(0)
+                        r.phase = Phase.PREFILL
+                        r.prefill_start = t
+                        state.prefill.queue_wait[r.rid] = t - r.arrival
+                        active.append(r)
+                        active_tokens += r.prompt_len
+                    active_layer = 0
+                    colocated = len(decoding) > 0
+                if active:
+                    u = state.resources.prefill_units if partition else U
+                    osub = 2.0 if (not partition and colocated) else 1.0
+                    if u > 0:
+                        lg = self.sim.scheduler.layer_group
+                        dur = self.truth.measure_prefill(
+                            cfg, active_tokens, max(u, 1),
+                            colocated=colocated,
+                            oversub=osub) / cfg.n_layers * lg
+                        pred = self.est.prefill_layer_time(
+                            cfg, active_tokens, 0, max(u, 1),
+                            colocated=colocated, oversub=osub) * lg
+                        self.pred_actual.append(("prefill", pred, dur))
+                        pf_end = t + dur
+
+            # launch decode iteration if engine idle
+            if dec_end is None and decoding and not pause_decode:
+                v = state.resources.decode_units if partition else U
+                osub = 2.0 if (not partition and colocated) else 1.0
+                if v > 0:
+                    ctx = max(1, int(sum(r.prompt_len + r.generated
+                                         for r in decoding) / len(decoding)))
+                    dur = self.truth.measure_decode(
+                        cfg, len(decoding), ctx, max(v, 1),
+                        colocated=colocated, oversub=osub)
+                    pred = self.est.decode_iter_time(
+                        cfg, len(decoding), ctx, max(v, 1),
+                        colocated=colocated, oversub=osub)
+                    self.pred_actual.append(("decode", pred, dur))
+                    dec_end = t + dur
+                    dec_started = t
+
+            events = [e for e in (pf_end, dec_end) if e is not None]
+            if ai < len(arrivals):
+                events.append(arrivals[ai].arrival)
+            if not events:
+                break
+            t = min(events)
+
+            if pf_end is not None and t >= pf_end - 1e-15:
+                pf_end = None
+                active_layer += self.sim.scheduler.layer_group
+                if active and active_layer >= cfg.n_layers:
+                    for r in active:
+                        r.phase = Phase.DECODE
+                        r.first_token_time = t
+                        r.generated = 1
+                        r.token_times.append(t)
+                        kv_tokens += r.prompt_len
+                        decoding.append(r)
+                        state.decode.decode_time[r.rid] = 0.0
+                    active = []
+                    active_tokens = 0
+                    active_layer = 0
+                run_cycle(t)
+
+            if dec_end is not None and t >= dec_end - 1e-15:
+                dt = t - dec_started
+                dec_end = None
+                finished = []
+                for r in decoding:
+                    if r.first_token_time is not None and \
+                            r.first_token_time >= dec_started:
+                        continue                 # joined mid-iteration
+                    r.generated += 1
+                    r.token_times.append(t)
+                    state.decode.decode_time[r.rid] = (
+                        state.decode.decode_time.get(r.rid, 0.0) + dt)
+                    if r.generated >= r.output_len:
+                        r.phase = Phase.FINISHED
+                        r.finish_time = t
+                        finished.append(r)
+                for r in finished:
+                    decoding.remove(r)
+                    kv_tokens -= r.prompt_len + r.generated
+                run_cycle(t)
+
+            if log_timeline:
+                self.log.append(SimLogEntry(
+                    t, state.resources.prefill_units,
+                    state.resources.decode_units, len(decoding),
+                    len(pending), active_tokens))
+
+        for r in trace:
+            if r.phase != Phase.FINISHED and r.first_token_time is not None:
+                r.finish_time = t
+                r.phase = Phase.FINISHED
+            elif r.phase != Phase.FINISHED:
+                pass   # never started — dropped at max_time
+
+    # ------------------------------------------------------------------
+    # Chunked prefill baseline (lock-step hybrid batches, §2.3)
+    # ------------------------------------------------------------------
+    def _run_chunked(self, trace: List[Request], budget: int,
+                     max_time: float, overlap: bool = False):
+        cfg, hw = self.sim.model, self.sim.hw
+        U = hw.total_units
+        pending: List[Request] = []
+        prefilling: List[Request] = []       # partially prefilled (FCFS)
+        decoding: List[Request] = []
+        arrivals = sorted(trace, key=lambda r: r.arrival)
+        ai = 0
+        t = 0.0
+        steps = 0
+        while True:
+            steps += 1
+            if steps > 5_000_000:
+                raise RuntimeError("simulator runaway")
+            while ai < len(arrivals) and arrivals[ai].arrival <= t:
+                pending.append(arrivals[ai]); ai += 1
+            if (ai >= len(arrivals) and not pending and not prefilling
+                    and not decoding):
+                break
+            if t > max_time:
+                break
+            if not pending and not prefilling and not decoding:
+                t = arrivals[ai].arrival
+                continue
+
+            # compose hybrid batch: decode tokens first (§2.3.1)
+            ds = len(decoding)
+            room = max(budget - ds, 0)
+            # admit new prefill requests FCFS until the budget is covered
+            admitted_room = room - sum(r.prompt_len - r.prefill_done_tokens
+                                       for r in prefilling)
+            while pending and admitted_room > 0:
+                r = pending.pop(0)
+                if r.prefill_start is None:
+                    r.prefill_start = t
+                    r.phase = Phase.PREFILL
+                prefilling.append(r)
+                admitted_room -= r.prompt_len
+            chunk_tokens = 0
+            chunk_parts: List[Tuple[Request, int]] = []
+            for r in prefilling:
+                if room <= 0:
+                    break
+                take = min(room, r.prompt_len - r.prefill_done_tokens)
+                if take > 0:
+                    chunk_parts.append((r, take))
+                    chunk_tokens += take
+                    room -= take
+
+            if ds == 0 and chunk_tokens == 0:
+                if ai < len(arrivals):
+                    t = max(t, arrivals[ai].arrival)
+                    continue
+                break
+
+            # lock-step hybrid iteration (phase-serial, §2.3)
+            parts = [(take, r.prefill_done_tokens) for r, take in chunk_parts]
+            ctx = (int(sum(x.prompt_len + x.generated for x in decoding) / ds)
+                   if ds else 0)
+            t_iter = self.truth._noisy(self.truth._est.lockstep_iter_time(
+                cfg, parts, ds, ctx, overlap=overlap))
+            t += t_iter
+
+            # apply progress
+            for r, take in chunk_parts:
+                r.prefill_done_tokens += take
+                if r.prefill_done_tokens >= r.prompt_len:
+                    prefilling.remove(r)
+                    r.phase = Phase.DECODE
+                    r.first_token_time = t
+                    r.generated = 1
+                    decoding.append(r)
+            finished = []
+            for r in decoding:
+                if r.first_token_time == t:
+                    continue               # joined this iteration
+                r.generated += 1
+                if r.generated >= r.output_len:
+                    r.phase = Phase.FINISHED
+                    r.finish_time = t
+                    finished.append(r)
+            for r in finished:
+                decoding.remove(r)
+
+        for r in trace:
+            if r.phase != Phase.FINISHED and r.first_token_time is not None:
+                r.finish_time = t
+                r.phase = Phase.FINISHED

@@ -1,0 +1,263 @@
+"""Bullet fused prefill+decode attention — the paper's spatial-temporal
+co-execution adapted to TPU (DESIGN.md §2).
+
+On GPU, Bullet runs prefill and decode kernels concurrently on disjoint SM
+partitions. A TPU core has no SM-mask analogue: grid steps of one kernel run
+sequentially, but the hardware overlaps the *DMA* of upcoming tiles with the
+*MXU* work of the current tile. This kernel therefore fuses the two phases
+into a single ``pallas_call`` whose 1-D grid is a static interleave of
+
+  - prefill tiles  (compute-bound: bq×bk MXU flash-attention steps), and
+  - decode tiles   (memory-bound: KV-cache streaming for one-token queries),
+
+so decode's HBM traffic hides under prefill's MXU waves — the same
+complementary-resource co-location, at tile rather than SM granularity. The
+``decode_share`` knob (ratio of decode tiles per slot) is the ``m_i/M``
+resource fraction of the paper's Eq. 2, and is what the Bullet scheduler
+(repro.core.scheduler) tunes per layer-group.
+
+Phase bookkeeping is done with static schedule arrays consumed by the
+index_maps; the inactive phase's block indices *hold their last value* so
+pallas neither refetches their inputs nor evicts the active phase's
+accumulator state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def build_schedule(n_prefill: int, n_decode: int, decode_share: float
+                   ) -> np.ndarray:
+    """Bresenham-merge the two tile streams.
+
+    Returns phase array (total,) of 0 (prefill) / 1 (decode). decode_share
+    is the target fraction of grid slots handed to decode while both streams
+    have tiles left; leftovers are appended.
+    """
+    total = n_prefill + n_decode
+    phase = np.zeros(total, np.int32)
+    p = d = 0
+    err = 0.0
+    for g in range(total):
+        take_decode = (d < n_decode) and (err + decode_share >= 1.0 or p >= n_prefill)
+        if take_decode:
+            phase[g] = 1
+            d += 1
+            err = err + decode_share - 1.0
+        else:
+            phase[g] = 0
+            p += 1
+            err = err + decode_share
+    return phase
+
+
+def _mk_index_arrays(phase: np.ndarray, dims_p: Tuple[int, ...],
+                     dims_d: Tuple[int, ...]):
+    """Per-grid-step multi-indices for each phase, hold-last when inactive."""
+    def unravel(count, dims):
+        return np.array(np.unravel_index(np.arange(count), dims))
+    total = len(phase)
+    p_idx = np.zeros((len(dims_p), total), np.int32)
+    d_idx = np.zeros((len(dims_d), total), np.int32)
+    up = unravel(int((phase == 0).sum()), dims_p)
+    ud = unravel(int((phase == 1).sum()), dims_d)
+    pi = di = 0
+    for g in range(total):
+        if phase[g] == 0:
+            p_idx[:, g] = up[:, pi]; pi += 1
+        else:
+            d_idx[:, g] = ud[:, di]; di += 1
+        if g and phase[g] == 1:
+            p_idx[:, g] = p_idx[:, g - 1]          # hold-last
+        if g and phase[g] == 0:
+            d_idx[:, g] = d_idx[:, g - 1]
+    return p_idx, d_idx
+
+
+def _bullet_kernel(phase_ref, pbh_ref, pqi_ref, pki_ref,
+                   db_ref, dh_ref, dsi_ref, pos_ref,
+                   qp_ref, kp_ref, vp_ref,
+                   qd_ref, kd_ref, vd_ref, kvpos_ref,
+                   op_ref, od_ref,
+                   pm, plse, pacc, dm, dlse, dacc, *,
+                   bq, bk, bs, n_kv_p, n_s_d, causal, window,
+                   scale_p, scale_d):
+    g = pl.program_id(0)
+    ph = phase_ref[g]
+    ki = pki_ref[g]
+    qi = pqi_ref[g]
+    si = dsi_ref[g]
+
+    # ---------------- prefill tile (compute-bound) ----------------
+    @pl.when((ph == 0) & (ki == 0))
+    def _init_p():
+        pm[...] = jnp.full_like(pm, NEG_INF)
+        plse[...] = jnp.zeros_like(plse)
+        pacc[...] = jnp.zeros_like(pacc)
+
+    @pl.when(ph == 0)
+    def _prefill():
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        q = qp_ref[0].astype(jnp.float32) * scale_p
+        k = kp_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window > 0:
+            mask = mask & (k_pos > q_pos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(pm[...], logits.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(pm[...] - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        plse[...] = plse[...] * alpha + p.sum(axis=-1, keepdims=True)
+        pacc[...] = pacc[...] * alpha + jax.lax.dot_general(
+            p, vp_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        pm[...] = m_new
+
+    @pl.when((ph == 0) & (ki == n_kv_p - 1))
+    def _fin_p():
+        op_ref[0] = (pacc[...] /
+                     jnp.maximum(plse[...], 1e-30)).astype(op_ref.dtype)
+
+    # ---------------- decode tile (memory-bound) -------------------
+    @pl.when((ph == 1) & (si == 0))
+    def _init_d():
+        dm[...] = jnp.full_like(dm, NEG_INF)
+        dlse[...] = jnp.zeros_like(dlse)
+        dacc[...] = jnp.zeros_like(dacc)
+
+    @pl.when(ph == 1)
+    def _decode():
+        q = qd_ref[0, 0].astype(jnp.float32) * scale_d       # (G, D)
+        k = kd_ref[0, :, 0].astype(jnp.float32)              # (bs, D)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        kvpos = kvpos_ref[0]
+        pos = pos_ref[db_ref[g]]
+        valid = (kvpos >= 0) & (kvpos <= pos)
+        logits = jnp.where(valid[None, :], logits, NEG_INF)
+        m_new = jnp.maximum(dm[...], logits.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(dm[...] - m_new)
+        p = jnp.where(valid[None, :], jnp.exp(logits - m_new), 0.0)
+        dlse[...] = dlse[...] * alpha + p.sum(axis=-1, keepdims=True)
+        dacc[...] = dacc[...] * alpha + jax.lax.dot_general(
+            p, vd_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dm[...] = m_new
+
+    @pl.when((ph == 1) & (si == n_s_d - 1))
+    def _fin_d():
+        od_ref[0, 0] = (dacc[...] /
+                        jnp.maximum(dlse[...], 1e-30)).astype(od_ref.dtype)
+
+
+def bullet_attention(qp, kp, vp, qd, kd, vd, kv_positions, pos, *,
+                     decode_share: float = 0.5,
+                     causal: bool = True, window: int = 0,
+                     block_q: int = 128, block_k: int = 128,
+                     block_s: int = 512, group: int = 1,
+                     interpret: bool = False):
+    """Fused prefill+decode attention.
+
+    Prefill: qp (BHp, Sp, D), kp/vp (BHp/group, Sp, D).
+    Decode:  qd (Bd, K, G, D), kd/vd (Bd, Sk, K, D), kv_positions (Bd, Sk),
+             pos (Bd,).
+    Returns (out_p (BHp, Sp, D), out_d (Bd, K, G, D)).
+    """
+    bhp, sp, d = qp.shape
+    bd, kh, gg, _ = qd.shape
+    sk = kd.shape[1]
+    bq, bk = min(block_q, sp), min(block_k, sp)
+    bs = min(block_s, sk)
+    assert sp % bq == 0 and sp % bk == 0 and sk % bs == 0
+    n_q, n_kv = sp // bq, sp // bk
+    n_s = sk // bs
+
+    dims_p = (bhp, n_q, n_kv)
+    dims_d = (bd, kh, n_s)
+    n_p_tiles = int(np.prod(dims_p))
+    n_d_tiles = int(np.prod(dims_d))
+    phase = build_schedule(n_p_tiles, n_d_tiles, decode_share)
+    p_idx, d_idx = _mk_index_arrays(phase, dims_p, dims_d)
+    pbh, pqi, pki = p_idx
+    db, dh, dsi = d_idx
+
+    kernel = functools.partial(
+        _bullet_kernel,
+        bq=bq, bk=bk, bs=bs, n_kv_p=n_kv, n_s_d=n_s,
+        causal=causal, window=window,
+        scale_p=d ** -0.5, scale_d=d ** -0.5)
+
+    # Schedule arrays + pos ride in as scalar prefetch; every index_map
+    # receives them after the grid index.
+    out_p, out_d = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=8,
+            grid=(len(phase),),
+            in_specs=[
+                pl.BlockSpec((1, bq, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (pbh[g], pqi[g], 0)),
+                pl.BlockSpec((1, bk, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (pbh[g] // group, pki[g], 0)),
+                pl.BlockSpec((1, bk, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (pbh[g] // group, pki[g], 0)),
+                pl.BlockSpec((1, 1, gg, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (db[g], dh[g], 0, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (db[g], dsi[g], dh[g], 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (db[g], dsi[g], dh[g], 0)),
+                pl.BlockSpec((1, bs),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (db[g], dsi[g])),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bq, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (pbh[g], pqi[g], 0)),
+                pl.BlockSpec((1, 1, gg, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos:
+                             (db[g], dh[g], 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, d), jnp.float32),
+                pltpu.VMEM((gg, 1), jnp.float32),
+                pltpu.VMEM((gg, 1), jnp.float32),
+                pltpu.VMEM((gg, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((bhp, sp, d), qp.dtype),
+            jax.ShapeDtypeStruct((bd, kh, gg, d), qd.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(phase), jnp.asarray(pbh), jnp.asarray(pqi),
+      jnp.asarray(pki), jnp.asarray(db), jnp.asarray(dh), jnp.asarray(dsi),
+      pos.astype(jnp.int32),
+      qp, kp, vp, qd, kd, vd, kv_positions)
+    return out_p, out_d

@@ -1,0 +1,95 @@
+"""Single-token GQA decode attention Pallas TPU kernel (memory-bound).
+
+One new query token attends over the KV cache. Grid: (batch, kv_heads,
+seq_tiles) with the sequence dimension sequential; the online-softmax
+accumulators for the G grouped query heads live in VMEM scratch. The cache
+streams HBM→VMEM tile by tile — this is the DMA-dominated kernel the Bullet
+fused schedule interleaves under prefill MXU work (see bullet_attention.py).
+
+Ring-buffer caches are supported through ``kv_positions`` (absolute position
+per slot, −1 = empty): masking is positional, not index-based.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kvpos_ref, pos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bs: int, n_s: int, scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (bs, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, bs)
+    kvpos = kvpos_ref[0]                                   # (bs,)
+    pos = pos_ref[0, 0]
+    valid = (kvpos >= 0) & (kvpos <= pos)                  # (bs,)
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, pos, *,
+                     block_s: int = 512, interpret: bool = False):
+    """q: (B, K, G, D); caches: (B, S, K, D); kv_positions: (B, S);
+    pos: (B,) int32. Returns (B, K, G, D)."""
+    b, kh, g, d = q.shape
+    s = k_cache.shape[1]
+    bs = min(block_s, s)
+    assert s % bs == 0, (s, bs)
+    n_s = s // bs
+
+    kernel = functools.partial(_decode_kernel, bs=bs, n_s=n_s,
+                               scale=d ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, si: (b_, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h, si: (b_, si, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h, si: (b_, si, h, 0)),
+            pl.BlockSpec((1, bs), lambda b_, h, si: (b_, si)),
+            pl.BlockSpec((1, 1), lambda b_, h, si: (b_, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, si: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k_cache, v_cache, kv_positions, pos.reshape(b, 1))

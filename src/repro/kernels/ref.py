@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (naive, materializing forms).
+
+Deliberately independent of ``repro.models`` so kernels and model ops are
+validated against a third implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (BH, Sq, D); k, v: (BHkv, Sk, D) with BH % BHkv == 0 handled by
+    caller (pass pre-expanded kv). Here BH == BHkv."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * d ** -0.5
+    sq, sk = q.shape[1], k.shape[1]
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window > 0:
+        mask = mask & (j > i - window)
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_positions, pos):
+    """q: (B, K, G, D); caches: (B, S, K, D); kv_positions: (B, S);
+    pos: (B,). Returns (B, K, G, D)."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * d ** -0.5
+    valid = (kv_positions >= 0) & (kv_positions <= pos[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def bullet_attention_ref(qp, kp, vp, qd, kd, vd, kv_positions, pos, *,
+                         causal=True, window=0):
+    """Fused hybrid batch = prefill flash + decode; the oracle just runs the
+    two phases back to back."""
+    out_p = flash_attention_ref(qp, kp, vp, causal=causal, window=window)
+    out_d = decode_attention_ref(qd, kd, vd, kv_positions, pos)
+    return out_p, out_d
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Sequential linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, S, W) fp32; h0: (B, W). Returns (h (B,S,W), h_T)."""
+    bsz, s, w = a.shape
+    h = jnp.zeros((bsz, w), jnp.float32) if h0 is None else h0
+    hs = []
+    for t in range(s):
+        h = a[:, t] * h + b[:, t]
+        hs.append(h)
+    y = jnp.stack(hs, axis=1)
+    return y, h
+
+
+def ssd_scan_ref(xw, da_cumsum, B_, C, state0=None):
+    """Sequential SSD oracle in cumulative-decay form.
+
+    xw: (B, S, H, P) inputs already scaled by dt;
+    da_cumsum: (B, S, H) cumulative sum of dt*A (log decay);
+    B_, C: (B, S, N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = xw.shape
+    n = B_.shape[-1]
+    da = jnp.diff(da_cumsum, axis=1, prepend=jnp.zeros((bsz, 1, h)))
+    st = (jnp.zeros((bsz, h, p, n), jnp.float32) if state0 is None
+          else state0)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(da[:, t])                         # (B,H)
+        st = st * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xw[:, t].astype(jnp.float32),
+            B_[:, t].astype(jnp.float32))
+        ys.append(jnp.einsum("bhpn,bn->bhp", st,
+                             C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(xw.dtype), st

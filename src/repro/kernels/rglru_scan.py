@@ -1,0 +1,64 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+The gate computation (two W×W matmuls) is MXU work best left to XLA; the
+truly sequential part — h_t = a_t * h_{t-1} + b_t — is this kernel. Grid:
+(batch_tiles, width_tiles, seq_tiles) with the sequence dimension sequential
+and the running state in VMEM scratch; within a seq tile a fori_loop steps
+through time. Width tiles are lane-aligned (multiples of 128 on real TPUs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, h_scr, *, bs: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        a_t = a_ref[:, t, :].astype(jnp.float32)
+        b_t = b_ref[:, t, :].astype(jnp.float32)
+        h = a_t * h + b_t
+        y_ref[:, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, bs, step, h_scr[...])
+
+
+def rglru_scan(a, b, h0=None, *, block_b: int = 8, block_w: int = 128,
+               block_s: int = 256, interpret: bool = False):
+    """a, b: (B, S, W); h0: (B, W) or None. Returns y (B, S, W) where
+    y_t = a_t * y_{t-1} + b_t (y_{-1} = h0)."""
+    bsz, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((bsz, w), jnp.float32)
+    bb = min(block_b, bsz)
+    bw = min(block_w, w)
+    bs = min(block_s, s)
+    assert bsz % bb == 0 and w % bw == 0 and s % bs == 0
+
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bb, w // bw, s // bs),
+        in_specs=[
+            pl.BlockSpec((bb, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((bb, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((bb, bw), lambda bi, wi, si: (bi, wi)),
+        ],
+        out_specs=pl.BlockSpec((bb, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, w), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bw), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, h0)

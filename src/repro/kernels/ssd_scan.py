@@ -1,0 +1,99 @@
+"""Mamba-2 SSD chunk-scan Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) with the chunk dimension sequential; the
+recurrent state (P×N, fp32) lives in VMEM scratch across chunks. Per chunk:
+
+    cb       = C_c B_c^T                  (Q×Q MXU matmul)
+    y_intra  = (cb ⊙ L) xw_c              (Q×Q decay-masked matmul)
+    y_inter  = (C_c ⊙ d_start) state      (Q×N @ N×P)
+    state    = decay·state + B_c^T (xw_c ⊙ d_end)
+
+All heavy ops are MXU matmuls; decay masks are built in-register from the
+per-chunk cumulative log-decay vector. Per-head grid steps keep L exact
+(decay is head-dependent); heads are the outer parallel dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xw_ref, cum_ref, b_ref, c_ref, y_ref, state_ref, *,
+                q: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xw = xw_ref[0, 0, 0].astype(jnp.float32)         # (Q, P)
+    cum = cum_ref[0, 0, 0].astype(jnp.float32)       # (Q, 1) cumulative logdecay
+    b = b_ref[0, 0].astype(jnp.float32)              # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)              # (Q, N)
+
+    cum_col = cum                                     # (Q, 1)
+    seg = cum_col - cum_col.reshape(1, q)             # (Q, Q): cum_i - cum_j
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(iota_j <= iota_i, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y_intra = jax.lax.dot_general(cb * L, xw, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                            # (N, P)
+    d_start = jnp.exp(cum_col)                        # (Q, 1)
+    y_inter = jax.lax.dot_general(c * d_start, state,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    total = cum_col[q - 1, 0]
+    d_end = jnp.exp(total - cum_col)                  # (Q, 1)
+    new_contrib = jax.lax.dot_general(b * d_end, xw,
+                                      (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    state_ref[...] = state * jnp.exp(total) + new_contrib
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_scan(xw, da_cumsum, B_, C, *, interpret: bool = False):
+    """Chunked SSD.
+
+    xw: (B, NC, Q, H, P) dt-scaled inputs per chunk;
+    da_cumsum: (B, NC, Q, H) within-chunk cumulative log decay;
+    B_, C: (B, NC, Q, N).
+    Returns y (B, NC, Q, H, P). (Final state remains in scratch; the model
+    path recovers it analytically — see ops.ssd_scan_op.)
+    """
+    b, nc, q, h, p = xw.shape
+    n = B_.shape[-1]
+    # layout: put head next to batch for per-(b,h) grid steps
+    xw_t = xw.transpose(0, 3, 1, 2, 4)               # (B, H, NC, Q, P)
+    cum_t = da_cumsum.transpose(0, 3, 1, 2)[..., None]  # (B, H, NC, Q, 1)
+
+    kernel = functools.partial(_ssd_kernel, q=q, n_chunks=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, 1), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q, p),
+                               lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nc, q, p), xw.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xw_t, cum_t, B_, C)
+    return y.transpose(0, 2, 3, 1, 4)                # (B, NC, Q, H, P)

@@ -1,0 +1,106 @@
+"""Unified paged KV pool (paper §3.5.2).
+
+Host-side block allocator shared by the prefill and decode engines: the
+prefill engine allocates blocks and fills them; migration to decode passes
+*block indices only* (copy-free, the cudaIpc-shared-pool analogue). The
+device-side cache is a dense per-slot region managed by the engine; this
+allocator provides admission control and the page-table bookkeeping a TPU
+paged-attention kernel would consume.
+
+Invariants (property-tested in tests/test_kvcache.py):
+  - a block is owned by at most one request;
+  - allocated + free == total;
+  - a request's pages cover exactly ceil(len / block_size) blocks;
+  - freeing is idempotent per request and returns all its blocks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclass
+class PageTable:
+    rid: int
+    blocks: List[int] = field(default_factory=list)
+    n_tokens: int = 0
+
+
+class PagedKVPool:
+    def __init__(self, total_tokens: int, block_size: int = 16):
+        assert block_size > 0 and total_tokens >= block_size
+        self.block_size = block_size
+        self.n_blocks = total_tokens // block_size
+        self._free: List[int] = list(range(self.n_blocks))
+        self._tables: Dict[int, PageTable] = {}
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def free_tokens(self) -> int:
+        return self.free_blocks * self.block_size
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self._blocks_for(n_tokens) <= self.free_blocks
+
+    def _blocks_for(self, n: int) -> int:
+        return -(-n // self.block_size)
+
+    # -- allocation ----------------------------------------------------
+    def allocate(self, rid: int, n_tokens: int) -> PageTable:
+        """Allocate pages for a request's prompt (prefill admission)."""
+        if rid in self._tables:
+            raise ValueError(f"rid {rid} already has a page table")
+        need = self._blocks_for(n_tokens)
+        if need > self.free_blocks:
+            raise OutOfBlocks(f"need {need} blocks, have {self.free_blocks}")
+        table = PageTable(rid, [self._free.pop() for _ in range(need)],
+                          n_tokens)
+        self._tables[rid] = table
+        return table
+
+    def extend(self, rid: int, n_new_tokens: int = 1) -> PageTable:
+        """Grow a request during decode; allocates a block on boundary."""
+        table = self._tables[rid]
+        new_total = table.n_tokens + n_new_tokens
+        need = self._blocks_for(new_total) - len(table.blocks)
+        if need > self.free_blocks:
+            raise OutOfBlocks(f"need {need} blocks, have {self.free_blocks}")
+        for _ in range(need):
+            table.blocks.append(self._free.pop())
+        table.n_tokens = new_total
+        return table
+
+    def migrate(self, rid: int) -> PageTable:
+        """Prefill→decode handoff: returns the page table (indices only —
+        no data movement; both engines map the same pool)."""
+        return self._tables[rid]
+
+    def free(self, rid: int) -> int:
+        """Release a finished request's blocks. Idempotent."""
+        table = self._tables.pop(rid, None)
+        if table is None:
+            return 0
+        self._free.extend(table.blocks)
+        n = len(table.blocks)
+        table.blocks = []
+        return n
+
+    def table(self, rid: int) -> Optional[PageTable]:
+        return self._tables.get(rid)
+
+    def check_invariants(self) -> None:
+        owned = [b for t in self._tables.values() for b in t.blocks]
+        assert len(owned) == len(set(owned)), "block double-booked"
+        assert len(owned) + len(self._free) == self.n_blocks, "leak"
+        assert set(owned).isdisjoint(self._free), "freed block still owned"
+        for t in self._tables.values():
+            assert len(t.blocks) == self._blocks_for(t.n_tokens)

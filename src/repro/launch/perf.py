@@ -1,0 +1,121 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb harness: re-lower one (arch × shape) under a named
+variant, report the roofline terms and the top traffic contributors, and
+append the iteration to launch_results/perf_iterations.json.
+
+Variants are toggled by environment knobs read in the model code
+(REPRO_ATTN_BLOCK, REPRO_ATTN_BF16_PROBS, REPRO_MOE_2D, ...); pass them via
+--env K=V pairs so each lowering happens in a clean interpreter state.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch codeqwen1.5-7b \
+      --shape prefill_32k --name baseline
+"""
+
+import argparse
+import json
+import re
+import time
+from collections import defaultdict
+
+import jax
+
+from repro.configs import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as R
+from repro.launch.specs import build_dryrun
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "launch_results", "perf_iterations.json")
+
+
+def top_traffic(hlo: str, n: int = 12):
+    """Largest HBM-traffic ops inside the (outermost) while body."""
+    comps = R._parse_computations(hlo)
+    entry = next(c for c in comps.values() if c.is_entry)
+    rows = []
+    bodies = []
+    for op in entry.ops:
+        if op.kind == "while":
+            m = R._CALL_ATTR_RE.search(op.line)
+            tm = R._TRIP_RE.search(op.line)
+            if m:
+                bodies.append((m.group(1),
+                               int(tm.group(1)) if tm else 1))
+    for body, trips in bodies or [(entry.name, 1)]:
+        comp = comps[body]
+        for op in comp.ops:
+            if op.kind in R._FREE_OPS:
+                continue
+            ob = R._shape_bytes(op.out_type)
+            cp = op.line.split("(", 1)[1] if "(" in op.line else op.line
+            cp = cp.split(")", 1)[0]
+            operand = sum(R._shape_bytes(comp.types.get(nm, ""))
+                          for nm in re.findall(r"%([\w.\-]+)", cp))
+            rows.append(((ob + operand) * trips, op.kind,
+                         op.line[:110]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def run(arch: str, shape: str, name: str, notes: str = "",
+        show_ops: bool = True) -> dict:
+    mesh = make_production_mesh()
+    t0 = time.time()
+    fn, args, in_sh, out_sh, policy = build_dryrun(arch, shape, mesh)
+    donate = (1,) if INPUT_SHAPES[shape].kind in ("prefill", "decode") else (0,)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=donate).lower(*args).compile()
+    hlo = compiled.as_text()
+    rep = R.analyze_hlo(hlo)
+    mem = compiled.memory_analysis()
+    t = rep.terms()
+    result = {
+        "arch": arch, "shape": shape, "variant": name, "notes": notes,
+        "env": {k: v for k, v in os.environ.items()
+                if k.startswith("REPRO_")},
+        "terms_ms": {k: v * 1e3 for k, v in t.items()},
+        "dominant": rep.dominant(),
+        "collective_bytes": rep.collective_bytes,
+        "hbm_gb": rep.hbm_bytes / 2**30,
+        "mem_per_device_gb": (mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              + mem.output_size_in_bytes
+                              - mem.alias_size_in_bytes) / 2**30,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    print(f"[{name}] {arch} {shape}: compute={t['compute_s']*1e3:.1f}ms "
+          f"memory={t['memory_s']*1e3:.1f}ms "
+          f"collective={t['collective_s']*1e3:.1f}ms "
+          f"(hbm {result['hbm_gb']:.1f}GB/chip)")
+    if show_ops:
+        for sz, kind, line in top_traffic(hlo):
+            print(f"   {sz/2**30:8.2f}GB {kind:24s} {line}")
+    path = os.path.abspath(OUT)
+    hist = json.load(open(path)) if os.path.exists(path) else []
+    hist.append(result)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    json.dump(hist, open(path, "w"), indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--name", required=True)
+    ap.add_argument("--notes", default="")
+    ap.add_argument("--env", nargs="*", default=[])
+    ap.add_argument("--no-ops", action="store_true")
+    args = ap.parse_args()
+    for kv in args.env:
+        k, v = kv.split("=", 1)
+        os.environ[k] = v
+    run(args.arch, args.shape, args.name, args.notes,
+        show_ops=not args.no_ops)
+
+
+if __name__ == "__main__":
+    main()

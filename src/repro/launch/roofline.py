@@ -1,0 +1,364 @@
+"""Roofline analysis from the compiled HLO artifact (§Roofline).
+
+``cost_analysis()`` counts ``while`` bodies once and reports no collective
+bytes, so this module parses the *optimized HLO text* instead:
+
+- builds the computation call graph (fusion ``calls=``, while ``body=`` with
+  ``known_trip_count`` from backend_config, conditional branches),
+- dot FLOPs from output/operand shapes × contracting dims,
+- HBM traffic: every materializing op contributes output bytes (one write)
+  plus operand bytes (one read per consumer),
+- collective bytes per type from operand/output sizes,
+- everything weighted by the product of enclosing trip counts.
+
+All shapes in post-SPMD HLO are per-device, so the resulting terms are
+per-chip seconds against TPU v5e peaks (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+ICI_LINKS = 4              # usable links per chip on a 2D torus (v5e: 4)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that do not materialize a buffer (views / metadata)
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+             "constant", "after-all", "partition-id", "replica-id",
+             "reshape", "bitcast-convert"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class OpInfo:
+    name: str
+    out_type: str
+    kind: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: List[OpInfo] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)   # name -> type str
+
+
+def _parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(2), is_entry=bool(m.group(1)))
+                # parameter types from header
+                header = m.group(3)
+                for pm in re.finditer(r"%?([\w.\-]+):\s*(\([^)]*\)|[\w\[\]{},\s]*?)(?:,\s*%|$)",
+                                      header):
+                    cur.types[pm.group(1)] = pm.group(2)
+                # simpler: also grab name: type pairs directly
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?)|\w+\[\])",
+                                      header):
+                    cur.types[pm.group(1)] = pm.group(2)
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, out_type, kind = dm.group(1), dm.group(2), dm.group(3)
+            cur.types[name] = out_type
+            cur.ops.append(OpInfo(name, out_type, kind, stripped))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _dot_flops(op: OpInfo, comp: Computation) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.out_type):
+        out_elems *= d
+    # lhs operand: first %name after "dot("
+    rest = (op.line.split(op.kind + "(", 1)[1]
+            if op.kind + "(" in op.line else op.line)
+    m = re.match(r"\s*%?([\w.\-]+)", rest)
+    lhs_type = comp.types.get(m.group(1), "") if m else ""
+    dims = _shape_dims(lhs_type)
+    cm = _CONTRACT_RE.search(op.line)
+    k = 1
+    if cm and dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+@dataclass
+class RooflineReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    dots: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def terms(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.flops / PEAK_FLOPS,
+            "memory_s": self.hbm_bytes / HBM_BW,
+            "collective_s": self.total_collective_bytes / (ICI_BW * ICI_LINKS),
+        }
+
+    def dominant(self) -> str:
+        t = self.terms()
+        return max(t, key=t.get)
+
+    def to_json(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+            "terms": self.terms(), "dominant": self.dominant(),
+        }
+
+
+def analyze_hlo(hlo_text: str) -> RooflineReport:
+    comps = _parse_computations(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    report = RooflineReport()
+    fusion_callees = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.kind == "fusion":
+                cm = _CALL_ATTR_RE.search(op.line)
+                if cm:
+                    fusion_callees.add(cm.group(1))
+
+    visited_guard: List[Tuple[str, float]] = []
+
+    def visit(comp_name: str, mult: float, inside_fusion: bool, depth: int):
+        if depth > 50 or mult <= 0:
+            return
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            k = op.kind
+            if k == "dot":
+                report.flops += _dot_flops(op, comp) * mult
+                report.dots += 1
+                if not inside_fusion:
+                    report.hbm_bytes += _op_traffic(op, comp) * mult
+            elif k in COLLECTIVES or any(op.line.lstrip("%").startswith(c)
+                                         for c in ()):
+                out_b = _shape_bytes(op.out_type)
+                opnd_b = _operand_bytes(op, comp)
+                if k == "all-reduce":
+                    traffic = 2.0 * out_b
+                elif k == "all-gather":
+                    traffic = out_b
+                else:
+                    traffic = max(out_b, opnd_b)
+                report.collective_bytes[k] = (
+                    report.collective_bytes.get(k, 0.0) + traffic * mult)
+                report.collective_count[k] = (
+                    report.collective_count.get(k, 0) + 1)
+                if not inside_fusion:
+                    report.hbm_bytes += (out_b + opnd_b) * mult
+            elif k == "while":
+                trips = 1
+                tm = _TRIP_RE.search(op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _CALL_ATTR_RE.search(op.line)
+                if bm:
+                    visit(bm.group(1), mult * trips, False, depth + 1)
+            elif k == "fusion" or k == "call":
+                cm = _CALL_ATTR_RE.search(op.line)
+                if not inside_fusion:
+                    if k == "fusion" and cm:
+                        report.hbm_bytes += _fusion_traffic(
+                            op, comp, cm.group(1)) * mult
+                    else:
+                        report.hbm_bytes += _op_traffic(op, comp) * mult
+                if cm and k == "call":
+                    visit(cm.group(1), mult, inside_fusion, depth + 1)
+                elif cm:
+                    # fused computation: count dot flops inside, no traffic
+                    visit(cm.group(1), mult, True, depth + 1)
+            elif k == "conditional":
+                for cal in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"true_computation=%?([\w.\-]+)|"
+                                      r"false_computation=%?([\w.\-]+))",
+                                      op.line):
+                    for g in cal:
+                        if g:
+                            for nm in g.split(","):
+                                visit(nm.strip().lstrip("%"), mult,
+                                      inside_fusion, depth + 1)
+            elif k in _FREE_OPS:
+                continue
+            else:
+                if not inside_fusion:
+                    report.hbm_bytes += _op_traffic(op, comp) * mult
+
+    def _operand_bytes(op: OpInfo, comp: Computation) -> int:
+        total = 0
+        call_part = op.line
+        if "(" in call_part:
+            call_part = call_part.split("(", 1)[1]
+        for nm in re.findall(r"%([\w.\-]+)", call_part):
+            t = comp.types.get(nm)
+            if t:
+                total += _shape_bytes(t)
+        return total
+
+    def _op_traffic(op: OpInfo, comp: Computation) -> int:
+        # In-place window ops: XLA updates/reads a slice of the big buffer;
+        # charging the whole buffer would overcount by the R×S cache size.
+        if op.kind == "dynamic-slice":
+            return 2 * _shape_bytes(op.out_type)            # read + write slice
+        if op.kind == "dynamic-update-slice":
+            ops_ = _operand_list(op, comp)
+            upd = _shape_bytes(comp.types.get(ops_[1], "")) if len(ops_) > 1 else 0
+            return 2 * upd
+        return _shape_bytes(op.out_type) + _operand_bytes(op, comp)
+
+    def _operand_list(op: OpInfo, comp: Computation):
+        call_part = op.line
+        if "(" in call_part:
+            call_part = call_part.split("(", 1)[1]
+        call_part = call_part.split(")", 1)[0]       # operands only, no attrs
+        return re.findall(r"%([\w.\-]+)", call_part)
+
+    def _fusion_traffic(op: OpInfo, comp: Computation, callee_name: str) -> int:
+        """Fusion HBM traffic with window-access awareness: operands the
+        fused computation only touches through dynamic-(update-)slice are
+        charged the slice/update size, not the whole buffer (in-place KV
+        cache updates would otherwise dominate by orders of magnitude)."""
+        callee = comps.get(callee_name)
+        operands = _operand_list(op, comp)
+        out_b = _shape_bytes(op.out_type)
+        if callee is None:
+            return out_b + sum(_shape_bytes(comp.types.get(nm, ""))
+                               for nm in operands)
+        # callee parameter order
+        param_names = []
+        for iop in callee.ops:
+            if iop.kind == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", iop.line)
+                param_names.append((int(pm.group(1)) if pm else len(param_names),
+                                    iop.name))
+        param_names = [n for _, n in sorted(param_names)]
+
+        # Alias map: convert/bitcast/copy/reshape chains keep the origin.
+        # (XLA:CPU emulates bf16 with f32 converts of whole buffers; on the
+        # target TPU those are free/nonexistent, so treat them as views.)
+        _ALIAS = {"convert", "bitcast", "copy", "reshape", "bitcast-convert"}
+        origin = {p: p for p in param_names}
+        windowed: Dict[str, int] = {}
+        touched_fully: set = set()
+
+        def org(nm):
+            return origin.get(nm)
+
+        for iop in callee.ops:
+            ops_i = _operand_list(iop, callee)
+            if iop.kind in _ALIAS and ops_i:
+                o = org(ops_i[0])
+                if o is not None:
+                    origin[iop.name] = o
+                continue
+            if iop.kind == "dynamic-slice" and ops_i:
+                o = org(ops_i[0])
+                if o is not None:
+                    windowed[o] = (windowed.get(o, 0)
+                                   + _shape_bytes(iop.out_type))
+                    ops_i = ops_i[1:]
+            elif iop.kind == "dynamic-update-slice" and len(ops_i) > 1:
+                o = org(ops_i[0])
+                if o is not None:
+                    upd = _shape_bytes(callee.types.get(ops_i[1], ""))
+                    windowed[o] = windowed.get(o, 0) + upd
+                    origin[iop.name] = o           # result aliases the base
+                    ops_i = ops_i[1:]
+            for nm in ops_i:
+                o = org(nm)
+                if o is not None:
+                    touched_fully.add(o)
+        total = 0
+        for i, nm in enumerate(operands[:len(param_names)]):
+            pname = param_names[i]
+            t = comp.types.get(nm, "")
+            full = _shape_bytes(t)
+            if pname in touched_fully or pname not in windowed:
+                total += full
+            else:
+                total += min(windowed[pname], full)
+        # output: if the root aliases an in-place update, charge the update
+        root = callee.ops[-1] if callee.ops else None
+        if root is not None and org(root.name) is not None and \
+                windowed.get(org(root.name)) and \
+                org(root.name) not in touched_fully:
+            total += min(windowed[org(root.name)], out_b)
+        else:
+            total += out_b
+        return total
+
+    visit(entry.name, 1.0, False, 0)
+    return report

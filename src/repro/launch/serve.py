@@ -1,0 +1,103 @@
+"""Serving launcher.
+
+Modes:
+- host (default): run the real Bullet runtime (concurrent engines, paged KV
+  pool, SLO scheduler) over a reduced variant on the local devices.
+- sim: estimator-driven discrete-event comparison vs baselines at scale.
+- dryrun: lower+compile prefill/decode for the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+      --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --mode sim --dataset sharegpt \
+      --rate 40
+"""
+
+import argparse
+import sys
+
+
+def _host(args):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.engine import BulletServer
+    from repro.models import init_params
+    from repro.serving.request import Request, SLO, ServingMetrics
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    server = BulletServer(cfg, params,
+                          slo=SLO(args.slo_ttft, args.slo_tpot),
+                          max_slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, args.max_len // 3))
+        out = int(rng.integers(2, args.max_len // 4))
+        r = Request(rid=rid, arrival=0.0, prompt_len=plen, output_len=out)
+        server.submit(r, rng.integers(0, cfg.vocab_size, plen))
+        reqs.append(r)
+    outputs = server.run()
+    print(f"served {len(outputs)} requests; stats: {server.stats}")
+    done = sum(len(v) for v in outputs.values())
+    print(f"generated {done} tokens total; KV pool clean:",
+          server.pool.free_blocks == server.pool.n_blocks)
+
+
+def _sim(args):
+    from repro.configs import get_config
+    from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+    from repro.core.profiler import SurrogateMachine, run_profiling
+    from repro.core.simulate import SimConfig, ServingSimulator
+    from repro.serving.request import WORKLOAD_SLOS
+    from repro.serving.workload import generate_trace
+
+    cfg = get_config(args.arch)
+    hw = HardwareSpec(n_chips=args.chips)
+    samples = run_profiling(cfg, hw, max_sl=4096, max_bs=32, max_cl=4096)
+    est = PerfEstimator(hw, fit_params(samples, cfg, hw, iters=30))
+    slo = WORKLOAD_SLOS[args.dataset]
+    for system in args.systems.split(","):
+        trace = generate_trace(args.dataset, args.rate, args.duration,
+                               seed=args.seed)
+        s = ServingSimulator(SimConfig(model=cfg, hw=hw, slo=slo), est,
+                             SurrogateMachine(hw, seed=7), system)
+        m = s.run(trace)
+        print(f"{system:16s} {m.row()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("host", "sim", "dryrun"),
+                    default="host")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--slo-ttft", type=float, default=3.0)
+    ap.add_argument("--slo-tpot", type=float, default=150.0)
+    ap.add_argument("--dataset", default="sharegpt")
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--duration", type=float, default=30.0)
+    ap.add_argument("--chips", type=int, default=2)
+    ap.add_argument("--systems",
+                    default="bullet,chunked-1024,chunked-2048,naive")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.mode == "dryrun":
+        from subprocess import run
+        code = 0
+        for shape in ("prefill_32k", "decode_32k"):
+            code |= run([sys.executable, "-m", "repro.launch.dryrun",
+                         "--arch", args.arch, "--shape", shape]).returncode
+        sys.exit(code)
+    if args.mode == "sim":
+        args.arch = "llama3.1-8b" if args.arch == "qwen3-1.7b" else args.arch
+        _sim(args)
+    else:
+        _host(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × input-shape)
+model input — weak-type-correct, shardable, no device allocation.
+
+Also builds the step functions + sharding trees the dry-run lowers:
+  train_4k     -> train_step(state, batch)
+  prefill_32k  -> prefill_step(params, tokens[, frontend], lengths, cache)
+  decode_32k   -> serve_step(params, cache, tokens, pos)
+  long_500k    -> serve_step with ring-window / state caches (sub-quadratic)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, get_config
+from repro.models import transformer as T
+from repro.models.sharding import ShardingPolicy, make_policy
+from repro.training.trainer import make_train_step, train_step_shardings
+
+DTYPE = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _batch_axes(policy: ShardingPolicy):
+    return policy.data_axes if policy.shard_batch else None
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Abstract model inputs for one (architecture × input shape)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        s_tok = s - (cfg.frontend_embed_len if not cfg.n_encoder_layers else 0)
+        out["tokens"] = sds((b, s_tok), jnp.int32)
+        out["labels"] = sds((b, s_tok), jnp.int32)
+        if cfg.frontend_embed_len:
+            fe_len = (cfg.encoder_seq_len if cfg.n_encoder_layers
+                      else cfg.frontend_embed_len)
+            out["frontend"] = sds((b, fe_len, cfg.frontend_embed_dim), DTYPE)
+    elif shape.kind == "prefill":
+        s_tok = s - (cfg.frontend_embed_len if not cfg.n_encoder_layers else 0)
+        out["tokens"] = sds((b, s_tok), jnp.int32)
+        out["lengths"] = sds((b,), jnp.int32)
+        if cfg.frontend_embed_len:
+            fe_len = (cfg.encoder_seq_len if cfg.n_encoder_layers
+                      else cfg.frontend_embed_len)
+            out["frontend"] = sds((b, fe_len, cfg.frontend_embed_dim), DTYPE)
+    else:   # decode
+        out["tokens"] = sds((b, 1), jnp.int32)
+        out["pos"] = sds((b,), jnp.int32)
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, DTYPE), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   long_context: bool):
+    return T.init_cache(cfg, batch, max_len, DTYPE,
+                        long_context=long_context, abstract=True)
+
+
+def _named(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_dryrun(arch: str, shape_name: str, mesh: Mesh):
+    """Returns (step_fn, example_args (SDS tree), in_shardings,
+    out_shardings) ready for jit().lower()."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    # FSDP-style weight sharding: always for training; for serving only
+    # when tensor parallelism alone cannot fit the weights (>8 GB/chip).
+    model_axis_size = mesh.shape.get("model", 1)
+    weights_gb = cfg.n_params * 2 / model_axis_size / 2**30
+    import os as _os
+    # default ON for decode (§Perf-3: 39x collective reduction vs FSDP
+    # weight gathers); REPRO_MOE_2D=0 restores the paper-faithful baseline
+    moe_2d = (_os.environ.get("REPRO_MOE_2D", "1") == "1"
+              and shape.kind == "decode" and cfg.n_experts > 0)
+    if (_os.environ.get("REPRO_MOE_2D_TRAIN") == "1"
+            and shape.kind == "train" and cfg.n_experts > 0):
+        moe_2d = True
+    policy = make_policy(cfg, mesh, global_batch=shape.global_batch,
+                         fsdp=(shape.kind == "train" or weights_gb > 8.0),
+                         moe_token_shard_map=(shape.kind != "train"
+                                              and not moe_2d),
+                         moe_2d_weights=moe_2d)
+    ins = input_specs(arch, shape_name)
+    bax = _batch_axes(policy)
+    pspecs = T.param_specs(cfg, policy)
+    long_ctx = shape_name == "long_500k"
+
+    if shape.kind == "train":
+        # pick gradient accumulation so remat residuals (~3 live copies of
+        # the bf16 per-layer activations) stay under ~5 GB/chip
+        b_local = shape.global_batch // max(policy.data_size, 1)
+        act_gb = (b_local * shape.seq_len * cfg.d_model * cfg.n_layers
+                  * 2 * 3) / 2**30
+        accum = 1
+        for cand in (1, 2, 4, 8, 16):
+            if b_local % cand == 0 and act_gb / cand > 5.0:
+                accum = min(cand * 2, b_local) if cand * 2 <= 16 else 16
+        while b_local % accum:
+            accum //= 2
+        init_fn, step_fn = make_train_step(cfg, policy, remat=True,
+                                           accum_steps=max(accum, 1))
+        params = abstract_params(cfg)
+        state = jax.eval_shape(init_fn, params)
+        (state_specs, batch_specs), (out_state_specs, metric_specs) = \
+            train_step_shardings(cfg, policy)
+        batch = {k: v for k, v in ins.items()}
+        bspecs = {k: batch_specs.get(k, P(bax, None, None)) for k in batch}
+        fn = step_fn
+        args = (state, batch)
+        in_sh = (_named(state_specs, mesh), _named(bspecs, mesh))
+        out_sh = (_named(out_state_specs, mesh), _named(metric_specs, mesh))
+        return fn, args, in_sh, out_sh, policy
+
+    params = abstract_params(cfg)
+    if shape.kind == "prefill":
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                               long_context=False)
+        cspecs = T.cache_specs(cfg, policy)
+
+        def fn(params, cache, tokens, lengths, frontend=None):
+            return T.prefill(params, tokens, lengths, cache, cfg, policy,
+                             frontend=frontend)
+
+        args = [params, cache, ins["tokens"], ins["lengths"]]
+        in_sh = [_named(pspecs, mesh), _named(cspecs, mesh),
+                 NamedSharding(mesh, P(bax, None)),
+                 NamedSharding(mesh, P(bax))]
+        if "frontend" in ins:
+            args.append(ins["frontend"])
+            in_sh.append(NamedSharding(mesh, P(bax, None, None)))
+        logits_spec = P(bax, policy.model_axis if policy.shard_vocab else None)
+        out_sh = (NamedSharding(mesh, logits_spec), _named(cspecs, mesh))
+        return fn, tuple(args), tuple(in_sh), out_sh, policy
+
+    # decode
+    max_len = shape.seq_len
+    cache = abstract_cache(cfg, shape.global_batch, max_len,
+                           long_context=long_ctx)
+    cspecs = T.cache_specs(cfg, policy)
+
+    def fn(params, cache, tokens, pos):
+        return T.decode_step(params, cache, tokens, pos, cfg, policy,
+                             long_context=long_ctx)
+
+    args = (params, cache, ins["tokens"], ins["pos"])
+    in_sh = (_named(pspecs, mesh), _named(cspecs, mesh),
+             NamedSharding(mesh, P(bax, None)), NamedSharding(mesh, P(bax)))
+    logits_spec = P(bax, policy.model_axis if policy.shard_vocab else None)
+    out_sh = (NamedSharding(mesh, logits_spec), _named(cspecs, mesh))
+    return fn, args, in_sh, out_sh, policy
+
+
+def scan_trip_counts(cfg: ModelConfig) -> Dict[str, int]:
+    return {"layers": cfg.n_pattern_repeats,
+            "encoder": cfg.n_encoder_layers}
+
+
+def sharded_resident_gb(args, shardings, mesh: Mesh) -> float:
+    """Analytic per-device bytes of the persistent inputs (params + cache /
+    optimizer state) under their shardings — the TPU-resident footprint.
+    The XLA:CPU backend's memory_analysis additionally includes f32
+    bf16-emulation copies that do not exist on TPU (EXPERIMENTS.md §Dry-run
+    caveat); this column is the hardware-honest fit check."""
+    total = 0.0
+    flat_args = jax.tree.leaves(args)
+    flat_sh = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    for a, sh in zip(flat_args, flat_sh):
+        nbytes = 1
+        for d in a.shape:
+            nbytes *= d
+        nbytes *= jnp.dtype(a.dtype).itemsize
+        shards = 1
+        for part in sh.spec:
+            if part is None:
+                continue
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                shards *= mesh.shape[ax]
+        total += nbytes / shards
+    return total / 2**30

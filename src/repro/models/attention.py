@@ -1,0 +1,304 @@
+"""Attention ops (XLA backend).
+
+- ``flash_ref_attention``: blockwise online-softmax causal/windowed attention
+  (never materializes the S×S score matrix) — used for training & prefill.
+- ``decode_attention``: single-token GQA attention over a KV cache.
+- ``seq_parallel_decode_attention``: flash-decoding-style shard_map over the
+  cache *sequence* dim for architectures whose KV heads do not divide the
+  model axis (DESIGN.md §4).
+
+The Pallas TPU kernels in ``repro.kernels`` implement the same contracts and
+are validated against these (and their ref.py oracles) in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def use_pallas_kernels() -> bool:
+    """Route attention through the Pallas TPU kernels when running on TPU
+    (or when forced via REPRO_FORCE_PALLAS=1, which uses interpret mode —
+    CPU tests exercise this path in tests/test_kernels.py)."""
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def attention_prefill(q, k, v, *, causal=True, window=0, block_size=None):
+    """Backend-dispatching prefill attention (model layout).
+
+    §Perf knobs: REPRO_ATTN_BLOCK (kv block), REPRO_ATTN_BF16_PROBS
+    (half-precision probabilities), REPRO_ATTN_CAUSAL_SKIP (q-chunked scan
+    with a dynamic kv bound — skips fully-masked upper-triangle blocks;
+    forward-only, used by the serving prefill path).
+    """
+    if use_pallas_kernels() and q.shape[1] % 128 == 0:
+        from repro.kernels import flash_attention_op
+        return flash_attention_op(q, k, v, causal=causal, window=window)
+    if block_size is None:
+        block_size = int(os.environ.get("REPRO_ATTN_BLOCK", "1024"))
+    if (causal and os.environ.get("REPRO_ATTN_CAUSAL_SKIP") == "1"
+            and q.shape[1] == k.shape[1] and q.shape[1] % block_size == 0):
+        return flash_ref_attention_causal_skip(
+            q, k, v, window=window, block_size=block_size)
+    return flash_ref_attention(q, k, v, causal=causal, window=window,
+                               block_size=block_size)
+
+
+def attention_decode(q, k_cache, v_cache, kv_positions, pos):
+    """Backend-dispatching decode attention (model layout, unsharded)."""
+    if use_pallas_kernels() and k_cache.shape[1] % 128 == 0:
+        from repro.kernels import decode_attention_op
+        return decode_attention_op(q, k_cache, v_cache, kv_positions, pos)
+    return decode_attention(q, k_cache, v_cache, kv_positions, pos)
+
+
+def _gqa_logits(q, k):
+    """q: (B,Sq,H,D), k: (B,Sk,K,D) -> (B, K, H/K, Sq, Sk) fp32 logits."""
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, d)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B,K,G,Sq,Sk) fp32, v: (B,Sk,K,D) -> (B,Sq,H,D)."""
+    b, kheads, g, sq, sk = p.shape
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, kheads * g, -1)
+
+
+def flash_ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int = 0,
+                        q_offset=0,
+                        block_size: int = 1024) -> jax.Array:
+    """Blockwise attention with online softmax.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H % K == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (chunked prefill).
+    ``window`` > 0 enables sliding-window masking (|i-j| < window).
+    Scans over KV blocks so peak memory is O(Sq × block_size) per head.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kheads = k.shape[2]
+    g = h // kheads
+    scale = d ** -0.5
+    q = (q * scale).astype(q.dtype)
+
+    bs = min(block_size, sk)
+    n_blocks = -(-sk // bs)
+    pad = n_blocks * bs - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, n_blocks, bs, kheads, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, bs, kheads, d).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(sq) + q_offset                       # (Sq,)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_blk, v_blk, blk_idx = blk
+        k_pos = blk_idx * bs + jnp.arange(bs)               # (bs,)
+        logits = _gqa_logits(q, k_blk)                      # (B,K,G,Sq,bs)
+        mask = jnp.broadcast_to(k_pos[None, :] < sk, (sq, bs))
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kheads, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kheads, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kb, vb, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def flash_ref_attention_causal_skip(q, k, v, *, window: int = 0,
+                                    block_size: int = 1024):
+    """Causal blockwise attention that SKIPS fully-masked kv blocks.
+
+    One scan over the *statically flattened lower triangle* of
+    (q_block, kv_block) pairs — nq(nq+1)/2 steps instead of nq² — so
+    upper-triangle blocks are never fetched or computed, halving attention
+    FLOPs and HBM traffic, with a static trip count (exact roofline
+    accounting). Online-softmax carries reset at each row start; outputs
+    are gathered at the (static) row-end steps. Forward-only path used by
+    serving prefill; training keeps flash_ref_attention.
+    """
+    import numpy as np
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    bs = block_size
+    nq = s // bs
+    scale = d ** -0.5
+    probs_dtype = (jnp.bfloat16 if os.environ.get("REPRO_ATTN_BF16_PROBS")
+                   == "1" else jnp.float32)
+
+    kb = k.reshape(b, nq, bs, kheads, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nq, bs, kheads, d).transpose(1, 0, 2, 3, 4)
+    qb = (q * scale).reshape(b, nq, bs, h, d).transpose(1, 0, 2, 3, 4)
+
+    qi_l, ki_l = [], []
+    for qi in range(nq):
+        lo = max(0, (qi * bs - window) // bs) if window > 0 else 0
+        for ki in range(lo, qi + 1):
+            qi_l.append(qi)
+            ki_l.append(ki)
+    QI = jnp.asarray(qi_l, jnp.int32)
+    KI = jnp.asarray(ki_l, jnp.int32)
+    row_start = jnp.asarray(
+        [1 if (i == 0 or qi_l[i] != qi_l[i - 1]) else 0
+         for i in range(len(qi_l))], bool)
+    ends = np.asarray([i for i in range(len(qi_l))
+                       if i + 1 == len(qi_l) or qi_l[i + 1] != qi_l[i]])
+
+    def step(carry, inp):
+        m, l, acc = carry
+        qi, ki, reset = inp
+        m = jnp.where(reset, NEG_INF, m)
+        l = jnp.where(reset, 0.0, l)
+        acc = jnp.where(reset, 0.0, acc)
+        q_i = jax.lax.dynamic_index_in_dim(qb, qi, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kb, ki, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vb, ki, 0, keepdims=False)
+        q_pos = qi * bs + jnp.arange(bs)
+        k_pos = ki * bs + jnp.arange(bs)
+        logits = _gqa_logits(q_i, k_blk)                   # (B,K,G,bs,bs)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None]).astype(probs_dtype)
+        l_new = l * alpha + p.sum(axis=-1).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(v_blk.dtype), v_blk
+        ).astype(jnp.float32)
+        y = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+             ).transpose(0, 3, 1, 2, 4).reshape(b, bs, h, d).astype(q.dtype)
+        return (m_new, l_new, acc_new), y
+
+    m0 = jnp.full((b, kheads, g, bs), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, bs), jnp.float32)
+    acc0 = jnp.zeros((b, kheads, g, bs, d), jnp.float32)
+    _, ys = jax.lax.scan(step, (m0, l0, acc0), (QI, KI, row_start))
+    out = ys[ends]                                         # (nq, B, bs, H, D)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_positions: jax.Array, pos: jax.Array) -> jax.Array:
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, D); caches: (B, S, K, D); kv_positions: (B, S) absolute
+    position of each cache slot (−1 = empty; ring buffers permute them);
+    pos: (B,) current absolute position. Returns (B, 1, H, D).
+    """
+    d = q.shape[-1]
+    logits = _gqa_logits(q * d ** -0.5, k_cache)            # (B,K,G,1,S)
+    valid = (kv_positions >= 0) & (kv_positions <= pos[:, None])
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(p, v_cache)
+
+
+def seq_parallel_decode_attention(q, k_cache, v_cache, kv_positions, pos, *,
+                                  mesh, axis: str, batch_axes=None):
+    """Flash-decoding over a sequence-sharded cache.
+
+    Caches are sharded (B_batch_axes, S/axis, K, D); q replicated over
+    ``axis`` but sharded over ``batch_axes``. Each shard computes a partial
+    softmax (m, l, o) over its cache slice and the results are merged with
+    exp-weighted psums over ``axis`` only.
+    """
+    d = q.shape[-1]
+    bax = batch_axes
+
+    def local(q, kc, vc, kv_pos, pos):
+        logits = _gqa_logits(q * d ** -0.5, kc)             # (B,K,G,1,S_loc)
+        valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+        logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+        m = logits.max(axis=-1)                             # (B,K,G,1)
+        p = jnp.exp(logits - m[..., None])
+        p = jnp.where(valid[:, None, None, None, :], p, 0.0)
+        l = p.sum(axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc
+                       ).astype(jnp.float32)
+        m_g = jax.lax.pmax(m, axis)
+        scale = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * scale, axis)
+        o_g = jax.lax.psum(o * scale[..., None], axis)
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        b, kh, g, sq, dd = out.shape
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kh * g, dd
+                                                    ).astype(q.dtype)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bax), P(bax, axis), P(bax, axis), P(bax, axis), P(bax)),
+        out_specs=P(bax),
+        check_vma=False)
+    return fn(q, k_cache, v_cache, kv_positions, pos)
+
+
+def write_cache_slot(cache: jax.Array, new: jax.Array, slot: jax.Array):
+    """Write ``new`` (B, 1, K, D) into ``cache`` (B, S, K, D) at per-batch
+    ``slot`` (B,) indices (vmapped dynamic_update_slice)."""
+    def upd(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+    return jax.vmap(upd)(cache, new, slot)
+
+
+def write_cache_slot_seq_sharded(cache, new, slot, *, mesh, axis: str,
+                                 batch_axes=None):
+    """Sequence-sharded variant of ``write_cache_slot``.
+
+    cache: (B, S, K, D) sharded (batch_axes, axis); the shard owning
+    ``slot`` performs the write, others keep their slice unchanged.
+    """
+    bax = batch_axes
+    def local(c, n, s):
+        s_loc = c.shape[1]
+        idx = jax.lax.axis_index(axis)
+        local_slot = s - idx * s_loc
+        owns = (local_slot >= 0) & (local_slot < s_loc)
+        clamped = jnp.clip(local_slot, 0, s_loc - 1)
+        def upd(ci, ni, sl, ow):
+            written = jax.lax.dynamic_update_slice(ci, ni, (sl, 0, 0))
+            return jnp.where(ow, written, ci)
+        return jax.vmap(upd)(c, n, clamped, owns)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bax, axis), P(bax), P(bax)),
+        out_specs=P(bax, axis),
+        check_vma=False)
+    return fn(cache, new, slot)

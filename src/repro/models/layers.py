@@ -1,0 +1,78 @@
+"""Shared building blocks: norms, RoPE, gated MLP, initializers."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S) int32.
+    """
+    d = x.shape[-1]
+    inv_freq = rope_frequencies(d, theta)                      # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, D/2)
+    ang = ang[..., None, :]                                    # (..., S, 1, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, wi: jax.Array, wo: jax.Array,
+              ) -> jax.Array:
+    """SwiGLU MLP; wi: (D, 2F) fused gate|up, wo: (F, D)."""
+    h = x @ wi
+    gate, up = jnp.split(h, 2, axis=-1)
+    return (jax.nn.silu(gate) * up) @ wo
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv.
+
+    x: (B, S, C), w: (K, C). If ``state`` (B, K-1, C) is given, it is the
+    left context (decode / chunked prefill); returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)             # (B, S+K-1, C)
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i:i + x.shape[1], :] * w[i]
+    new_state = xp[:, x.shape[1]:, :] if k > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(c * softplus(Lambda) * (-r_t))  (a = sigmoid(Lambda)^(c r) form)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill uses ``jax.lax.associative_scan`` on the linear recurrence
+(h_t = a_t h_{t-1} + b_t); decode is a single fused step. The full block is
+conv1d + RG-LRU inside a gated (GeGLU-style) wrapper, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d
+
+_C = 8.0   # Griffin's fixed exponent scale
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array      # (B, K-1, W)
+    hidden: jax.Array    # (B, W) fp32
+
+
+def _gates(x, params):
+    """x: (B,S,W) -> log_a (B,S,W) fp32, gated input (B,S,W) fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def rglru_scan(x, params, h0: Optional[jax.Array] = None, *,
+               chunk: int = 512):
+    """Linear-recurrence scan. x: (B,S,W). Returns (y (B,S,W), h_T (B,W)).
+
+    Chunked: a lax.scan over time blocks carries the state, with a
+    (rematerialized) associative scan inside each block — the flat
+    associative scan holds O(S·W·log S) intermediates for backward, which
+    dominates training memory at 4k context (EXPERIMENTS.md §Dry-run).
+    """
+    a, b = _gates(x, params)
+    bsz, s, w = a.shape
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    if s <= chunk:
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0)
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        return h.astype(x.dtype), h[:, -1]
+
+    pad = (-s) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    a_c = a.reshape(bsz, nc, chunk, w).transpose(1, 0, 2, 3)
+    b_c = b.reshape(bsz, nc, chunk, w).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def body(h, inp):
+        a_i, b_i = inp
+        b_i = b_i.at[:, 0].add(a_i[:, 0] * h)
+        _, hs = jax.lax.associative_scan(combine, (a_i, b_i), axis=1)
+        return hs[:, -1], hs
+
+    h_init = (jnp.zeros((bsz, w), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, hs = jax.lax.scan(body, h_init, (a_c, b_c))
+    y = hs.transpose(1, 0, 2, 3).reshape(bsz, nc * chunk, w)[:, :s]
+    # h_T must come from the last *valid* position when padded
+    h_T = y[:, -1].astype(jnp.float32) if pad else h_last
+    return y.astype(x.dtype), h_T
+
+
+def rglru_step(x, params, h0):
+    """Single decode step. x: (B,1,W), h0: (B,W) fp32."""
+    a, b = _gates(x, params)
+    h = a[:, 0] * h0 + b[:, 0]
+    return h[:, None].astype(x.dtype), h
+
+
+def rglru_block(x, params, cfg, *, state: Optional[RGLRUState] = None,
+                decode: bool = False):
+    """Full Griffin recurrent block.
+
+    x: (B,S,D) (already layer-normed). params: w_in (D, 2W), conv (K, W),
+    w_a/w_x (W,W), b_a/b_x (W,), lambda (W,), w_out (W, D).
+    Returns (y (B,S,D), new_state).
+    """
+    w = cfg.lru_width
+    h = x @ params["w_in"]
+    branch, gate = jnp.split(h, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    branch, new_conv = causal_conv1d(branch, params["conv"], conv_state)
+    h0 = state.hidden if state is not None else None
+    if decode:
+        assert state is not None
+        y, h_t = rglru_step(branch, params, state.hidden)
+    else:
+        y, h_t = rglru_scan(branch, params, h0)
+    y = y * jax.nn.gelu(gate)
+    out = y @ params["w_out"]
+    return out, RGLRUState(new_conv, h_t)

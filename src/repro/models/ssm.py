@@ -1,0 +1,172 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked formulation (arXiv:2405.21060 §6): the sequence is split into chunks
+of length Q; within-chunk outputs use the quadratic "attention" form with a
+causal decay mask, across-chunk contributions flow through the recurrent
+state h ∈ (B, H, P, N) carried by a lax.scan — O(S·Q) work, MXU-friendly
+matmuls, exact (not approximate).
+
+Decode is the pure recurrence: h ← da·h + dt·(B ⊗ x); y = C·h + D·x.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d
+
+
+class SSDState(NamedTuple):
+    conv: jax.Array        # (B, K-1, d_conv_channels)
+    ssm: jax.Array         # (B, H, P, N) fp32
+
+
+def ssd_chunked(x, dt, A, B_, C, D, *, chunk: int, remat: bool = True,
+                state0=None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   values (post-conv)
+    dt: (B, S, H)      positive step sizes (post-softplus)
+    A:  (H,)           negative decay rates
+    B_: (B, S, N)      input projections (shared across heads, n_groups=1)
+    C:  (B, S, N)      output projections
+    D:  (H,)           skip
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input leave the
+        # state untouched; padded outputs are sliced off below.
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    da = dt * A[None, None, :]                  # (B,S,H) log-decay per step
+    xw = x * dt[..., None]                      # weight inputs by dt
+
+    # reshape into chunks
+    xw_c = xw.reshape(b, nc, q, h, p)
+    da_c = da.reshape(b, nc, q, h)
+    B_c = B_.reshape(b, nc, q, n)
+    C_c = C.reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(da_c, axis=2)              # (B,NC,Q,H) within-chunk cumsum
+
+    # One lax.scan over chunks does BOTH the state recurrence and the
+    # quadratic intra-chunk term, so the (B,Q,Q,H) decay mask exists for one
+    # chunk at a time (the all-chunks form needs NC x that peak memory; the
+    # Pallas ssd_scan kernel keeps it in VMEM entirely).
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def scan_body(hstate, inp):
+        xw_i, cum_i, b_i, c_i = inp              # (B,Q,H,P),(B,Q,H),(B,Q,N)x2
+        seg = cum_i[:, :, None, :] - cum_i[:, None, :, :]    # (B,Q,Q,H)
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", c_i, b_i)            # (B,Q,Q)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp",
+                             cb, L.astype(cb.dtype), xw_i)
+        d_start = jnp.exp(cum_i)                             # (B,Q,H)
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp",
+                             c_i, d_start.astype(c_i.dtype),
+                             hstate.astype(c_i.dtype))
+        d_end = jnp.exp(cum_i[:, -1:, :] - cum_i)            # (B,Q,H)
+        chunk_state = jnp.einsum("bjn,bjh,bjhp->bhpn",
+                                 b_i, d_end.astype(b_i.dtype), xw_i)
+        chunk_decay = jnp.exp(cum_i[:, -1, :])               # (B,H)
+        new_state = (hstate * chunk_decay[..., None, None]
+                     + chunk_state.astype(jnp.float32))
+        return new_state, (y_intra + y_inter)
+
+    if remat:
+        # nested remat: the (B,Q,Q,H) mask is recomputed in backward, so
+        # only one chunk's quadratic intermediates are ever live.
+        scan_body = jax.checkpoint(scan_body)
+    h0 = (jnp.zeros((b, h, p, n), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+    hT, y_c = jax.lax.scan(
+        scan_body, h0,
+        (xw_c.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3),
+         B_c.transpose(1, 0, 2, 3), C_c.transpose(1, 0, 2, 3)))
+    y = y_c.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    y = y + x * D[None, None, :, None]
+    return y[:, :s_orig].astype(x.dtype), hT
+
+
+def ssd_decode_step(x, dt, A, B_, C, D, state):
+    """Single-token recurrence.
+
+    x: (B,1,H,P), dt: (B,1,H), B_/C: (B,1,N), state: (B,H,P,N) fp32.
+    """
+    da = jnp.exp(dt[:, 0] * A[None, :])                      # (B,H)
+    xw = x[:, 0] * dt[:, 0][..., None]                       # (B,H,P)
+    upd = jnp.einsum("bhp,bn->bhpn", xw.astype(jnp.float32),
+                     B_[:, 0].astype(jnp.float32))
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C[:, 0].astype(jnp.float32))
+    y = y + x[:, 0].astype(jnp.float32) * D[None, :, None]
+    return y[:, None].astype(x.dtype), new_state
+
+
+def ssd_block(x, params, cfg, *, state: Optional[SSDState] = None,
+              decode: bool = False, policy=None):
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    x: (B, S, D). Returns (y, new_state).
+    params: in_proj (D, 2*di + 2*N + H), conv (K, di+2N), A_log (H,),
+            D (H,), dt_bias (H,), norm (di,), out_proj (di, D).
+    """
+    b, s, d = x.shape
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_n_heads
+    p = cfg.ssm_head_dim
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * n], axis=-1)
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = causal_conv1d(xbc, params["conv"], conv_state)
+    xs, B_, C = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (H,) negative
+    xs = xs.reshape(b, s, h, p)
+    if (policy is not None and policy.mesh is not None
+            and policy.mesh.size > 1 and h % policy.model_size == 0):
+        import jax.sharding as jsh
+        bax = policy.data_axes if policy.shard_batch else None
+        m = policy.model_axis
+        cst = lambda t, spec: jax.lax.with_sharding_constraint(
+            t, jsh.NamedSharding(policy.mesh, jsh.PartitionSpec(*spec)))
+        xs = cst(xs, (bax, None, m, None))
+        dt = cst(dt, (bax, None, m))
+
+    if decode:
+        assert state is not None
+        y, new_ssm = ssd_decode_step(xs, dt, A, B_, C,
+                                     params["D"].astype(jnp.float32),
+                                     state.ssm)
+    else:
+        y, new_ssm = ssd_chunked(xs, dt, A, B_, C,
+                                 params["D"].astype(jnp.float32),
+                                 chunk=cfg.ssm_chunk,
+                                 state0=state.ssm if state is not None
+                                 else None)
+
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.rmsnorm_eps)
+    yf = yf * (1.0 + params["norm"].astype(jnp.float32))
+    out = yf.astype(x.dtype) @ params["out_proj"]
+    return out, SSDState(new_conv, new_ssm)

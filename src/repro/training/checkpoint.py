@@ -1,0 +1,51 @@
+"""Checkpointing: flat .npz with tree-path keys (no orbax dependency)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, step: int = 0, extra: dict = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    meta = {"step": step, "extra": extra or {},
+            "keys": sorted(flat)}
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def load_checkpoint(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (from init_params /
+    eval_shape)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat = _flatten(like)
+    restored = {}
+    for key in flat:
+        arr = data[key]
+        assert arr.shape == flat[key].shape, (key, arr.shape, flat[key].shape)
+        restored[key] = jnp.asarray(arr, dtype=flat[key].dtype)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    ordered = []
+    for path, _ in leaves_paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        ordered.append(restored[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), meta["step"]

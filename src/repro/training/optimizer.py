@@ -1,0 +1,153 @@
+"""Optimizers (hand-rolled, no optax): AdamW and Adafactor.
+
+AdamW for <10B models; Adafactor (factored second moment, no first moment)
+for the huge assigned configs (llama4-maverick 400B, mixtral-8x22B,
+internvl2-76B) where Adam state would not fit 16 GB/chip even fully
+sharded — the standard large-model fallback, noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class _Out:
+    """Leaf marker so tree_map can return multiple arrays per param
+    without colliding with tuples in the param tree structure."""
+    __slots__ = ("a", "b", "c")
+
+    def __init__(self, a, b, c):
+        self.a, self.b, self.c = a, b, c
+
+
+def _split3(flat):
+    leaf = lambda t: isinstance(t, _Out)
+    return (jax.tree.map(lambda t: t.a, flat, is_leaf=leaf),
+            jax.tree.map(lambda t: t.b, flat, is_leaf=leaf),
+            jax.tree.map(lambda t: t.c, flat, is_leaf=leaf))
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any            # row second-moment (or full for <2D params)
+    vc: Any            # col second-moment (zeros for <2D params)
+
+
+def _wd_mask(path) -> bool:
+    """No weight decay on norms / biases / 1-D params."""
+    name = "/".join(str(getattr(k, "key", k)) for k in path)
+    return not any(t in name for t in ("norm", "ln", "b_a", "b_x", "bias",
+                                       "lambda", "A_log", "dt_bias"))
+
+
+def make_adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8, weight_decay: float = 0.1,
+               warmup: int = 100, total_steps: int = 10_000):
+    def schedule(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        return lr * w * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+    def init(params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = schedule(step)
+
+        def upd(path, g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** step)
+            vh = v / (1 - b2 ** step)
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay and _wd_mask(path):
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            return _Out(new_p, m, v)
+
+        flat = jax.tree_util.tree_map_with_path(
+            lambda path, g, m, v, p: upd(path, g, m, v, p),
+            grads, state.m, state.v, params)
+        new_params, new_m, new_v = _split3(flat)
+        return new_params, AdamWState(step, new_m, new_v)
+
+    return init, update
+
+
+def make_adafactor(lr: float = 1e-3, decay: float = 0.8,
+                   eps: float = 1e-30, clip: float = 1.0,
+                   warmup: int = 100):
+    def schedule(step):
+        return lr * jnp.minimum(step / max(warmup, 1), 1.0)
+
+    def init(params) -> AdafactorState:
+        def rows(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, jnp.float32)
+
+        def cols(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(rows, params),
+                              jax.tree.map(cols, params))
+
+    def update(grads, state: AdafactorState, params):
+        step = state.step + 1
+        lr_t = schedule(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** -decay
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr_n = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc_n = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                r = vr_n / jnp.maximum(
+                    vr_n.mean(axis=-1, keepdims=True), eps)
+                denom = jnp.sqrt(r[..., None] * vc_n[..., None, :])
+            else:
+                vr_n = beta * vr + (1 - beta) * g2
+                vc_n = vc
+                denom = jnp.sqrt(vr_n)
+            u = g / jnp.maximum(denom, eps)
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / clip)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return _Out(new_p, vr_n, vc_n)
+
+        flat = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        new_params, new_vr, new_vc = _split3(flat)
+        return new_params, AdafactorState(step, new_vr, new_vc)
+
+    return init, update
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return make_adamw(**kw)
+    if name == "adafactor":
+        return make_adafactor(**kw)
+    raise ValueError(name)
+
+
+def optimizer_for(n_params: int) -> str:
+    """Adam state for >20B params cannot fit v5e HBM even sharded."""
+    return "adamw" if n_params < 20e9 else "adafactor"

@@ -1,0 +1,133 @@
+"""Training substrate: loss, train_step factory (remat, MoE aux loss),
+metrics."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.sharding import ShardingPolicy
+from repro.training.optimizer import make_optimizer, optimizer_for
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token NLL in fp32. logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            policy: Optional[ShardingPolicy] = None, *,
+            remat: bool = False, aux_weight: float = 0.01):
+    logits, aux = T.forward(params, batch["tokens"], cfg, policy,
+                            frontend=batch.get("frontend"), remat=remat)
+    fe = 0
+    if cfg.frontend_embed_len and not cfg.n_encoder_layers:
+        fe = cfg.frontend_embed_len          # frontend positions carry no loss
+        logits = logits[:, fe:]
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, policy: Optional[ShardingPolicy] = None,
+                    *, optimizer: Optional[str] = None, remat: bool = True,
+                    lr: float = 3e-4, accum_steps: int = 1, **opt_kw):
+    """Returns (init_fn(params)->TrainState, step_fn(state,batch)).
+
+    ``accum_steps`` > 1 splits the global batch into microbatches inside a
+    lax.scan with fp32 gradient accumulation — the remat-scan residuals then
+    scale with the microbatch, which is what lets the big assigned configs
+    fit 16 GB/chip at global_batch=256 (EXPERIMENTS.md §Dry-run).
+    """
+    opt_name = optimizer or optimizer_for(cfg.n_params)
+    opt_init, opt_update = make_optimizer(opt_name, lr=lr, **opt_kw)
+
+    def init_fn(params) -> TrainState:
+        return TrainState(params, opt_init(params))
+
+    def _grads(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, policy, remat=remat)
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if accum_steps <= 1:
+            (loss, metrics), grads = _grads(state.params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (loss, m), g = _grads(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32) / accum_steps,
+                    g_acc, g)
+                return (g_acc, l_acc + m["loss"] / accum_steps,
+                        a_acc + m["aux"] / accum_steps), None
+
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), micro)
+            metrics = {"loss": loss, "aux": aux}
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-6))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        params, opt_state = opt_update(grads, state.opt_state, state.params)
+        metrics = dict(metrics, grad_norm=gnorm, total=metrics["loss"])
+        return TrainState(params, opt_state), metrics
+
+    return init_fn, step_fn
+
+
+def train_step_shardings(cfg: ModelConfig, policy: ShardingPolicy):
+    """(in_shardings, out_shardings) PartitionSpec trees for pjit of
+    step_fn — used by launch/dryrun.py and launch/train.py."""
+    from jax.sharding import PartitionSpec as P
+    from repro.training.optimizer import AdamWState, AdafactorState
+    pspecs = T.param_specs(cfg, policy)
+    opt_name = optimizer_for(cfg.n_params)
+    leaf = lambda x: isinstance(x, P)
+    if opt_name == "adamw":
+        opt_specs = AdamWState(P(), jax.tree.map(lambda s: s, pspecs, is_leaf=leaf),
+                               jax.tree.map(lambda s: s, pspecs, is_leaf=leaf))
+    else:
+        def row_spec(spec):
+            return P(*tuple(spec)[:-1]) if len(tuple(spec)) >= 2 else spec
+        def col_spec(spec):
+            t = tuple(spec)
+            return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P(None)
+        opt_specs = AdafactorState(
+            P(),
+            jax.tree.map(row_spec, pspecs, is_leaf=leaf),
+            jax.tree.map(col_spec, pspecs, is_leaf=leaf))
+    state_specs = TrainState(pspecs, opt_specs)
+    bax = policy.data_axes if policy.shard_batch else None
+    batch_specs = {"tokens": P(bax, None), "labels": P(bax, None)}
+    if cfg.frontend_embed_len:
+        batch_specs["frontend"] = P(bax, None, None)
+    metric_specs = {"loss": P(), "aux": P(), "grad_norm": P(), "total": P()}
+    return (state_specs, batch_specs), (state_specs, metric_specs)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override lives
+# ONLY in launch/dryrun.py, per the dry-run spec).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,82 @@
+"""Property tests on the paged KV pool invariants (hypothesis)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.kvcache.paged import OutOfBlocks, PagedKVPool
+
+
+def test_basic_alloc_free():
+    pool = PagedKVPool(total_tokens=256, block_size=16)
+    t = pool.allocate(1, 33)
+    assert len(t.blocks) == 3          # ceil(33/16)
+    pool.check_invariants()
+    assert pool.free(1) == 3
+    assert pool.free_blocks == pool.n_blocks
+    assert pool.free(1) == 0           # idempotent
+
+
+def test_extend_allocates_on_boundary():
+    pool = PagedKVPool(total_tokens=256, block_size=16)
+    pool.allocate(1, 16)
+    t = pool.extend(1, 1)              # 17 tokens -> 2 blocks
+    assert len(t.blocks) == 2
+    for _ in range(15):
+        pool.extend(1, 1)              # up to 32 -> still 2
+    assert len(pool.table(1).blocks) == 2
+    pool.extend(1, 1)                  # 33 -> 3
+    assert len(pool.table(1).blocks) == 3
+    pool.check_invariants()
+
+
+def test_out_of_blocks():
+    pool = PagedKVPool(total_tokens=64, block_size=16)
+    pool.allocate(1, 64)
+    with pytest.raises(OutOfBlocks):
+        pool.allocate(2, 1)
+    assert not pool.can_admit(1)
+    pool.free(1)
+    assert pool.can_admit(64)
+
+
+def test_migration_is_copy_free_handle():
+    pool = PagedKVPool(total_tokens=128, block_size=16)
+    t1 = pool.allocate(7, 40)
+    t2 = pool.migrate(7)
+    assert t1 is t2                    # same table object: indices only
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                          st.integers(0, 7), st.integers(1, 60)),
+                max_size=60))
+def test_pool_invariants_random_ops(ops):
+    pool = PagedKVPool(total_tokens=512, block_size=16)
+    live = set()
+    for kind, rid, n in ops:
+        try:
+            if kind == "alloc" and rid not in live:
+                pool.allocate(rid, n)
+                live.add(rid)
+            elif kind == "extend" and rid in live:
+                pool.extend(rid, n)
+            elif kind == "free":
+                pool.free(rid)
+                live.discard(rid)
+        except OutOfBlocks:
+            pass
+        pool.check_invariants()
+    # drain
+    for rid in list(live):
+        pool.free(rid)
+    assert pool.free_blocks == pool.n_blocks
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 400), st.integers(1, 32))
+def test_blocks_for_matches_ceil(n_tokens, block_size):
+    pool = PagedKVPool(total_tokens=max(block_size * 64, 512),
+                       block_size=block_size)
+    t = pool.allocate(0, n_tokens)
+    assert len(t.blocks) == -(-n_tokens // block_size)

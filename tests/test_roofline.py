@@ -1,0 +1,59 @@
+"""HLO-text roofline analyzer: known-program validation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import analyze_hlo, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[32,256]{1,0}") == 32 * 256 * 4
+    assert _shape_bytes("bf16[2,4,8]") == 64 * 2
+    assert _shape_bytes("s32[]") == 4
+    assert _shape_bytes("(f32[8], bf16[4,4])") == 32 + 32
+    assert _shape_bytes("pred[16]") == 16
+
+
+def test_dot_flops_exact():
+    f = jax.jit(lambda a, b: a @ b)
+    co = f.lower(jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 32), jnp.float32)).compile()
+    rep = analyze_hlo(co.as_text())
+    assert rep.flops == pytest.approx(2 * 64 * 128 * 32)
+    assert rep.dots == 1
+
+
+def test_scan_trip_count_multiplies():
+    def step(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+    co = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+    rep = analyze_hlo(co.as_text())
+    assert rep.flops == pytest.approx(7 * 2 * 8 * 64 * 64, rel=0.01)
+
+
+def test_memory_traffic_sane_for_elementwise():
+    f = jax.jit(lambda a: (a * 2 + 1).sum())
+    co = f.lower(jax.ShapeDtypeStruct((1 << 20,), jnp.float32)).compile()
+    rep = analyze_hlo(co.as_text())
+    nbytes = (1 << 20) * 4
+    # must at least read the input once, and not explode
+    assert nbytes * 0.9 <= rep.hbm_bytes <= nbytes * 6
+
+
+def test_terms_and_dominant():
+    f = jax.jit(lambda a, b: a @ b)
+    co = f.lower(jax.ShapeDtypeStruct((16, 16), jnp.float32),
+                 jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    rep = analyze_hlo(co.as_text())
+    t = rep.terms()
+    assert set(t) == {"compute_s", "memory_s", "collective_s"}
+    assert all(v >= 0 for v in t.values())
+    assert rep.dominant() in t
+    assert rep.to_json()["dominant"] == rep.dominant()

@@ -1,0 +1,142 @@
+"""SLO-aware scheduler (Algorithm 1): branch behavior + safety properties."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core.estimator import HardwareSpec, PerfEstimator
+from repro.core.metadata import (DecodeStatus, PrefillStatus, ResourceStatus,
+                                 SystemState)
+from repro.core.scheduler import SchedulerConfig, SLOScheduler
+from repro.serving.request import SLO
+
+CFG = get_config("llama3.1-8b")
+HW = HardwareSpec()
+SLO_ = SLO(norm_ttft_ms=3.0, tpot_ms=150.0)
+
+
+def mk_state(*, prefill_tokens=0, layers_done=0, decode_batch=0, ctx=1024,
+             tpot_ms=20.0, u=16, v=16, waiting=0):
+    s = SystemState()
+    if prefill_tokens:
+        s.prefill = PrefillStatus(active_rid=0, layers_done=layers_done,
+                                  total_layers=CFG.n_layers,
+                                  n_tokens=prefill_tokens, started_at=0.0,
+                                  n_waiting=waiting)
+    d = DecodeStatus()
+    for i in range(decode_batch):
+        rid = 100 + i
+        d.batch.append(rid)
+        d.out_tokens[rid] = 10
+        d.decode_time[rid] = 10 * tpot_ms / 1e3
+    d.mean_context = ctx
+    s.decode = d
+    s.resources = ResourceStatus(u, v)
+    return s
+
+
+def mk_sched(**kw):
+    return SLOScheduler(CFG, PerfEstimator(HW), SLO_, SchedulerConfig(**kw))
+
+
+def test_prefill_only_gets_everything():
+    sched = mk_sched()
+    st_ = mk_state(prefill_tokens=2048, decode_batch=0)
+    d = sched.schedule(st_, now=0.1, pending=[])
+    assert d.resources.prefill_units == HW.total_units
+    assert d.resources.decode_units == 0
+
+
+def test_decode_only_gets_everything():
+    sched = mk_sched()
+    st_ = mk_state(prefill_tokens=0, decode_batch=16)
+    d = sched.schedule(st_, now=0.1, pending=[])
+    assert d.resources.decode_units == HW.total_units
+    assert not d.pause_decode
+
+
+def test_tpot_violation_reduces_prefill():
+    sched = mk_sched()
+    st_ = mk_state(prefill_tokens=512, decode_batch=16, tpot_ms=300.0, u=28, v=4)
+    d = sched.schedule(st_, now=0.01, pending=[])
+    assert d.reason in ("reduce_prefill", "balanced")
+    assert d.resources.prefill_units < 28
+
+
+def test_both_violated_balances():
+    sched = mk_sched()
+    # absurd prefill backlog + violated decode
+    st_ = mk_state(prefill_tokens=200_000, decode_batch=64, tpot_ms=400.0)
+    pend = [(i, -100.0, 8000) for i in range(1, 30)]   # long queue, old
+    d = sched.schedule(st_, now=10.0, pending=pend)
+    assert d.reason == "balanced"
+    r = d.resources
+    assert r.prefill_units >= sched.sc.min_prefill_units
+    assert r.decode_units >= sched.sc.min_decode_units
+
+
+def test_pause_respects_cumulative_tpot_projection():
+    sched = mk_sched()
+    st_ = mk_state(prefill_tokens=4096, decode_batch=8, tpot_ms=5.0)
+    ok = sched._pause_ok(st_, dt_pause=0.01)     # +10ms over 10 tokens
+    assert ok
+    st2 = mk_state(prefill_tokens=4096, decode_batch=8, tpot_ms=85.0)
+    # 85ms cumulative already ≈ margin (0.6*150=90): a 100ms pause must fail
+    assert not sched._pause_ok(st2, dt_pause=0.1)
+
+
+def test_reorder_puts_tightest_slack_first():
+    sched = mk_sched()
+    st_ = mk_state(prefill_tokens=1024, decode_batch=4)
+    # rid 1: tiny prompt waited long (normalized ttft explodes) vs rid 2
+    pend = [(2, 0.0, 8000), (1, -5.0, 32)]
+    d = sched.schedule(st_, now=0.2, pending=pend)
+    assert d.reorder.index(1) < d.reorder.index(2)
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    prefill_tokens=st.integers(0, 32768),
+    decode_batch=st.integers(0, 64),
+    tpot_ms=st.floats(1.0, 500.0),
+    ctx=st.integers(1, 16384),
+    waiting=st.integers(0, 20),
+)
+def test_decision_always_valid(prefill_tokens, decode_batch, tpot_ms, ctx,
+                               waiting):
+    """Safety: any state yields a quantized, in-range, non-degenerate
+    partition; pause only with active decode work."""
+    sched = mk_sched()
+    st_ = mk_state(prefill_tokens=prefill_tokens, decode_batch=decode_batch,
+                   tpot_ms=tpot_ms, ctx=ctx, waiting=waiting)
+    pend = [(i, 0.0, 100) for i in range(1, waiting + 1)]
+    d = sched.schedule(st_, now=1.0, pending=pend)
+    r = d.resources
+    U = HW.total_units
+    assert 0 <= r.prefill_units <= U
+    assert 0 <= r.decode_units <= U
+    assert r.prefill_units + r.decode_units <= U or \
+        (r.prefill_units == U and r.decode_units == U)  # never oversub here
+    assert r.prefill_units % sched.sc.unit_quantum == 0
+    assert r.decode_units % sched.sc.unit_quantum == 0
+    if d.pause_decode:
+        assert decode_batch > 0 and prefill_tokens > 0
+
+
+def test_wave_quantization_aware_split():
+    """The Algorithm-2 search must not blindly maximize prefill units when a
+    smaller split avoids an Eq.-1 tail wave (the u=30-vs-32 trap)."""
+    sched = mk_sched()
+    est = sched.est
+    st_ = mk_state(prefill_tokens=256, decode_batch=4, tpot_ms=5.0, ctx=256)
+    d = sched.schedule(st_, now=0.01, pending=[])
+    u = d.resources.prefill_units or HW.total_units
+    t_choice = est.prefill_layer_time(CFG, 256, 0, u, colocated=True)
+    # no candidate split may beat the chosen one by >25%
+    for v in range(2, HW.total_units - 1, 2):
+        t = est.prefill_layer_time(CFG, 256, 0, HW.total_units - v,
+                                   colocated=True)
+        tpot = sched.predicted_tpot_ms(st_, v)
+        if tpot <= sched.sc.tpot_margin * SLO_.tpot_ms:
+            assert t_choice <= t * 1.25

@@ -1,0 +1,113 @@
+"""Discrete-event serving simulator: end-to-end behavior of Bullet vs the
+baselines on identical traces (the paper's Fig. 11-14 harness)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+from repro.core.profiler import SurrogateMachine, run_profiling
+from repro.core.simulate import SimConfig, ServingSimulator
+from repro.serving.request import Phase, WORKLOAD_SLOS
+from repro.serving.workload import DATASETS, generate_trace
+
+CFG = get_config("llama3.1-8b")
+HW = HardwareSpec(n_chips=2)
+
+
+@pytest.fixture(scope="module")
+def est():
+    samples = run_profiling(CFG, HW, max_sl=4096, max_bs=32, max_cl=4096)
+    return PerfEstimator(HW, fit_params(samples, CFG, HW, iters=25))
+
+
+def run(system, est, *, dataset="sharegpt", rate=30.0, dur=12.0, seed=3):
+    slo = WORKLOAD_SLOS[dataset]
+    sim = SimConfig(model=CFG, hw=HW, slo=slo)
+    trace = generate_trace(dataset, rate_req_s=rate, duration_s=dur, seed=seed)
+    s = ServingSimulator(sim, est, SurrogateMachine(HW, seed=7), system)
+    return s.run(trace), trace, s
+
+
+def test_all_requests_complete(est):
+    for system in ("bullet", "chunked-1024", "bullet-fix16", "naive"):
+        m, trace, _ = run(system, est)
+        assert all(r.phase == Phase.FINISHED for r in trace), system
+        assert m.n_requests == len(trace)
+        assert m.throughput_tok_s > 0
+
+
+def test_request_timestamps_consistent(est):
+    _, trace, _ = run("bullet", est)
+    for r in trace:
+        assert r.prefill_start >= r.arrival - 1e-9
+        assert r.first_token_time >= r.prefill_start
+        assert r.finish_time >= r.first_token_time
+        assert r.generated == r.output_len
+
+
+def test_bullet_beats_naive_under_load(est):
+    mb, _, _ = run("bullet", est, rate=40.0)
+    mn, _, _ = run("naive", est, rate=40.0)
+    assert mb.goodput >= mn.goodput
+    assert mb.mean_ttft_s < mn.mean_ttft_s
+
+
+def test_bullet_beats_chunked_ttft_under_congestion(est):
+    """Paper's headline: chunked prefill congests; Bullet holds TTFT."""
+    mb, _, _ = run("bullet", est, rate=45.0, dur=20.0)
+    mc, _, _ = run("chunked-1024", est, rate=45.0, dur=20.0)
+    assert mb.mean_ttft_s < mc.mean_ttft_s
+    assert mb.goodput > mc.goodput
+
+
+def test_dynamic_beats_static_partitions_on_goodput(est):
+    mb, _, _ = run("bullet", est, rate=40.0, dur=15.0)
+    worst = 1.0
+    for fixed in ("bullet-fix8", "bullet-fix16", "bullet-fix24"):
+        mf, _, _ = run(fixed, est, rate=40.0, dur=15.0)
+        worst = min(worst, mf.goodput)
+    assert mb.goodput >= worst  # and typically beats all (Fig. 13)
+
+
+def test_chunk_size_tradeoff_direction(est):
+    """Paper §2.3: larger chunks -> better TTFT, worse TPOT."""
+    m_small, _, _ = run("chunked-512", est, rate=40.0, dur=15.0)
+    m_large, _, _ = run("chunked-2048", est, rate=40.0, dur=15.0)
+    assert m_large.mean_ttft_s <= m_small.mean_ttft_s * 1.1
+    assert m_large.mean_tpot_ms >= m_small.mean_tpot_ms * 0.9
+
+
+def test_timeline_log_records_dynamic_partitions(est):
+    _, _, s = run("bullet", est, rate=35.0, dur=10.0)
+    s2 = ServingSimulator(
+        SimConfig(model=CFG, hw=HW, slo=WORKLOAD_SLOS["sharegpt"]),
+        est, SurrogateMachine(HW, seed=7), "bullet")
+    trace = generate_trace("sharegpt", 35.0, 10.0, seed=3)
+    s2.run(trace, log_timeline=True)
+    units = {e.prefill_units for e in s2.log}
+    assert len(units) > 2             # actually re-partitions (Fig. 12)
+
+
+def test_estimator_slo_classification_accuracy(est):
+    """Fig. 15: predicted vs actual duration — SLO-compliance classification
+    must be reliable even with absolute error."""
+    _, _, s = run("bullet", est, rate=35.0, dur=15.0)
+    pairs = s.pred_actual
+    assert len(pairs) > 100
+    rel = [abs(p / a - 1.0) for _, p, a in pairs if a > 0]
+    assert sum(rel) / len(rel) < 0.35          # mean relative error
+    # threshold-classification agreement at an arbitrary latency target
+    for thresh in (0.005, 0.02):
+        agree = sum((p <= thresh) == (a <= thresh) for _, p, a in pairs)
+        assert agree / len(pairs) > 0.8
+
+
+def test_workload_distributions_shape():
+    tr = generate_trace("azure-code", 5.0, 30.0, seed=0)
+    ts = generate_trace("sharegpt", 5.0, 30.0, seed=0)
+    mean_in_code = sum(r.prompt_len for r in tr) / len(tr)
+    mean_in_chat = sum(r.prompt_len for r in ts) / len(ts)
+    assert mean_in_code > 3 * mean_in_chat     # code prompts much longer
+    mean_out_code = sum(r.output_len for r in tr) / len(tr)
+    mean_out_chat = sum(r.output_len for r in ts) / len(ts)
+    assert mean_out_chat > 2 * mean_out_code

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED variant of the same family
+(≤2-ish layers via one pattern period, d_model ≤ 512, ≤4 experts) and runs
+one forward + one train step on CPU, asserting output shapes and no NaNs.
+The FULL configs are exercised via the dry-run only (launch/dryrun.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import init_params, init_cache, forward, prefill, decode_step
+from repro.training.trainer import make_train_step
+
+B, S = 2, 16
+
+
+def _frontend(cfg, key):
+    if cfg.n_encoder_layers:
+        return jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.frontend_embed_dim))
+    if cfg.frontend_embed_len:
+        return jax.random.normal(
+            key, (B, cfg.frontend_embed_len, cfg.frontend_embed_dim))
+    return None
+
+
+@pytest.fixture(scope="module", params=ASSIGNED_ARCHS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return request.param, cfg, params
+
+
+def test_reduced_config_limits(arch_setup):
+    _, cfg, _ = arch_setup
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= len(cfg.pattern) + len(cfg.pattern_tail)
+    assert cfg.n_experts <= 4
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    name, cfg, params = arch_setup
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    fe = _frontend(cfg, jax.random.PRNGKey(2))
+    logits, aux = forward(params, tokens, cfg, frontend=fe)
+    s_out = S + (cfg.frontend_embed_len if fe is not None
+                 and not cfg.n_encoder_layers else 0)
+    assert logits.shape == (B, s_out, cfg.vocab_padded), name
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size]))), name
+    assert bool(jnp.isfinite(aux)), name
+
+
+def test_train_step_no_nans(arch_setup):
+    name, cfg, params = arch_setup
+    init_fn, step_fn = make_train_step(cfg, optimizer="adamw", remat=True,
+                                       lr=1e-3, warmup=2)
+    state = init_fn(params)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                                     cfg.vocab_size),
+    }
+    fe = _frontend(cfg, jax.random.PRNGKey(5))
+    if fe is not None:
+        batch["frontend"] = fe
+    state, metrics = jax.jit(step_fn)(state, batch)
+    assert np.isfinite(float(metrics["loss"])), name
+    assert np.isfinite(float(metrics["grad_norm"])), name
+    assert all(bool(jnp.all(jnp.isfinite(p)))
+               for p in jax.tree.leaves(state.params)), name
+
+
+def test_decode_matches_forward(arch_setup):
+    """Prefill + decode must reproduce teacher-forcing logits."""
+    name, cfg, params = arch_setup
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)  # no drops
+    S0 = 10
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    fe = _frontend(cfg, jax.random.PRNGKey(2))
+    full, _ = forward(params, tokens, cfg, frontend=fe)
+    fe_len = (cfg.frontend_embed_len
+              if fe is not None and not cfg.n_encoder_layers else 0)
+    cache = init_cache(cfg, B, S + fe_len + 2, jnp.float32)
+    lengths = jnp.array([S0 + fe_len] * B)
+    lg, cache = prefill(params, tokens[:, :S0], lengths, cache, cfg,
+                        frontend=fe)
+    scale = max(float(jnp.abs(full).max()), 1.0)
+    errs = [float(jnp.abs(lg - full[:, fe_len + S0 - 1]).max())]
+    for t in range(S0, S):
+        lg, cache = decode_step(params, cache, tokens[:, t:t + 1],
+                                jnp.array([t + fe_len] * B), cfg)
+        errs.append(float(jnp.abs(lg - full[:, fe_len + t]).max()))
+    assert max(errs) < 2e-3 * scale, (name, errs)

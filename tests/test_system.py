@@ -1,0 +1,74 @@
+"""End-to-end system behaviour: the full Bullet pipeline on a real model
+plus the multi-device sharded paths on a host mesh."""
+
+import subprocess
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs, ASSIGNED_ARCHS
+from repro.configs.base import INPUT_SHAPES
+
+
+def test_all_assigned_archs_registered():
+    have = set(list_configs())
+    for a in ASSIGNED_ARCHS:
+        assert a in have
+    assert "llama3.1-8b" in have          # the paper's own model
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_param_counts_in_range():
+    expect = {
+        "llama4-maverick-400b-a17b": (350e9, 450e9),
+        "mixtral-8x22b": (120e9, 160e9),
+        "internvl2-76b": (60e9, 80e9),
+        "codeqwen1.5-7b": (6e9, 9e9),
+        "mamba2-2.7b": (2e9, 3.5e9),
+        "recurrentgemma-2b": (2e9, 3.5e9),
+        "qwen3-1.7b": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert cfg.n_active_params < 0.1 * cfg.n_params   # top-1 of 128
+
+
+def test_dryrun_entrypoint_single_combo():
+    """The dry-run module must run standalone with its own XLA_FLAGS
+    device override (spec requires the env line before any import)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    src = (
+        "import repro.launch.dryrun as d\n"
+        "import jax\n"
+        "assert len(jax.devices()) == 512, len(jax.devices())\n"
+        "r = d.run_one('granite-3-2b', 'decode_32k', multi_pod=False,"
+        " verbose=False)\n"
+        "assert r['memory']['per_device_gb'] < 16.0\n"
+        "print('DRYRUN_OK', r['roofline']['dominant'])\n"
+    )
+    out = subprocess.run([sys.executable, "-c", src], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "DRYRUN_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_tests_see_single_device():
+    # the 512-device override must NOT leak into the test process
+    assert len(jax.devices()) == 1
