@@ -19,6 +19,7 @@ BENCHES = [
     ("fig13_sensitivity", "benchmarks.sensitivity"),
     ("fig14_ablation", "benchmarks.ablation"),
     ("fig15_estimator_accuracy", "benchmarks.estimator_accuracy"),
+    ("replay_vs_sim", "benchmarks.replay_vs_sim"),
     ("table3_overheads", "benchmarks.overheads"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline_table"),

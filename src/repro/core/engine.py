@@ -24,7 +24,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +102,25 @@ class EngineStats:
     reconfigs: int = 0
     paused_cycles: int = 0
     migrated: int = 0
+    preempted: int = 0
+
+
+@dataclass
+class PrefillTask:
+    """Resumable prefill state for one prompt batch (paper §3.5).
+
+    The prefill engine persists activations and per-group cache entries
+    here between layer-group launches, so the main loop can run decode
+    iterations — and admit newly-arrived work — *between* groups instead
+    of holding the device for the whole prompt."""
+    batch: List[Request]
+    x: jax.Array                          # activations after `rep` groups
+    positions: jax.Array
+    lengths: jax.Array
+    tmp_cache: dict
+    n_tokens: int = 0                     # total prompt tokens in the batch
+    entries: List[tuple] = field(default_factory=list)
+    rep: int = 0                          # next pattern-repeat group to run
 
 
 class BulletServer:
@@ -139,9 +158,27 @@ class BulletServer:
         self.pending: List[Request] = []
         self.finished: List[Request] = []
         self.outputs: Dict[int, List[int]] = {}
+        #: in-flight resumable prefill (at most one batch at a time)
+        self.ptask: Optional[PrefillTask] = None
+        #: streaming hook: called as on_token(req, token, now) for every
+        #: emitted token (first token at migration, then one per decode
+        #: iteration)
+        self.on_token: Optional[Callable[[Request, int, float], None]] = None
+        #: what the most recent step() actually executed — consumed by
+        #: virtual-clock replay to charge exactly the work that ran
+        self.last_prefill_tokens: int = 0
+        self.last_decode: Optional[Tuple[int, int]] = None   # (batch, ctx)
 
     # -- request ingress ------------------------------------------------
     def submit(self, req: Request, prompt_tokens: np.ndarray):
+        # a request's pool footprint (prompt + output) is invariant across
+        # preemption/resume, so an oversized request can be rejected here
+        # instead of spinning unadmittable in the queue forever
+        footprint = req.prompt_len + max(req.output_len, 1)
+        if self.pool.blocks_for(footprint) > self.pool.n_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {footprint} KV tokens; the pool "
+                f"holds {self.pool.n_blocks * self.pool.block_size}")
         req.phase = Phase.QUEUED
         req._prompt = np.asarray(prompt_tokens, np.int32)   # type: ignore
         self.pending.append(req)
@@ -152,102 +189,249 @@ class BulletServer:
                 return i
         return None
 
-    # -- engines ----------------------------------------------------------
-    def _prefill_cycle(self, now: float) -> bool:
-        """Admit + run one full prefill (repeat-group granular). Returns
-        True if work was done."""
+    def _pending_meta(self) -> List[Tuple[int, float, int]]:
+        return [(r.rid, r.arrival, r.prompt_len) for r in self.pending]
+
+    def _apply_reorder(self, order: Optional[List[int]]) -> None:
+        """Honor the scheduler's Decision.reorder (slack-sorted rids)."""
+        if not order or len(self.pending) < 2:
+            return
+        pos = {rid: i for i, rid in enumerate(order)}
+        self.pending.sort(key=lambda r: pos.get(r.rid, len(pos)))
+
+    def _switch(self, resources) -> None:
+        """Swap partitions, counting only actual re-configurations."""
+        before = self.rm.current.config_id
+        part = self.rm.switch(resources)
+        if part.config_id != before:
+            self.stats.reconfigs += 1
+        self.buffer.write(lambda s: (
+            setattr(s.resources, "prefill_units", part.prefill_units),
+            setattr(s.resources, "decode_units", part.decode_units),
+            setattr(s.resources, "config_id", part.config_id)))
+
+    # -- prefill engine ---------------------------------------------------
+    def _resume_len(self, r: Request) -> int:
+        """Tokens the prefill must cover: prompt plus any prefix generated
+        before a preemption (resumed requests recompute their KV over it)."""
+        return r.prompt_len + len(self.outputs.get(r.rid, []))
+
+    def _need_tokens(self, r: Request) -> int:
+        """Pool reservation for a request: the full prompt (+ resume
+        prefix) and output footprint, reserved at admission so decode can
+        never over-commit the pool mid-flight."""
+        return self._resume_len(r) + max(r.output_len - r.generated, 1)
+
+    def _preempt_candidates(self, req: Request) -> List[Request]:
+        """Decode slots eligible for eviction: strictly younger arrivals
+        (priority order prevents preemption cycles)."""
+        return [r for r in self.slot_req
+                if r is not None and r.phase == Phase.DECODE
+                and r.arrival > req.arrival]
+
+    def _preempt_for(self, req: Request, now: float) -> bool:
+        """KV pressure (§3.5.2): evict the lowest-priority decode slot —
+        the strictly younger request with the latest arrival — freeing its
+        pool pages and requeueing it with its generated prefix."""
+        victims = self._preempt_candidates(req)
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: r.arrival)
+        slot = victim._slot                                 # type: ignore
+        self.pool.preempt(victim.rid)
+        self.active = self.active.at[slot].set(False)
+        self.slot_req[slot] = None
+        victim.phase = Phase.QUEUED
+        self.pending.append(victim)
+        self.stats.preempted += 1
+        D = self.buffer.state.decode
+        if victim.rid in D.batch:
+            D.batch.remove(victim.rid)
+        self._drop_request_meta(victim.rid)
+        return True
+
+    def _admit_prefill(self, now: float) -> bool:
+        """Form the next prompt batch from the pending queue, honoring the
+        scheduler's slack-sorted reorder; on pool pressure, preempt before
+        head-of-line blocking."""
+        if self.ptask is not None or not self.pending:
+            return False
+        if self._free_slot() is None:        # saturated: skip the slack scan
+            return False
+        state = self.buffer.read()
+        if len(self.pending) > 1:
+            self._apply_reorder(
+                self.scheduler.reorder_pending(state, now,
+                                               self._pending_meta()))
         batch: List[Request] = []
         while (self.pending and len(batch) < self.max_prefill_batch
                and self._free_slot() is not None):
             r = self.pending[0]
-            if not self.pool.can_admit(r.prompt_len + r.output_len):
-                break
+            need = self._need_tokens(r)
+            if not self.pool.can_admit(need):
+                if batch:
+                    break
+                # evict only if the eligible victims' blocks actually
+                # cover the shortfall — never waste decode progress
+                reclaimable = sum(
+                    len(self.pool.table(v.rid).blocks)
+                    for v in self._preempt_candidates(r))
+                if (self.pool.blocks_for(need)
+                        > self.pool.free_blocks + reclaimable):
+                    break
+                while (not self.pool.can_admit(need)
+                       and self._preempt_for(r, now)):
+                    pass
+                if not self.pool.can_admit(need):
+                    break
             slot = self._free_slot()
-            self.pool.allocate(r.rid, r.prompt_len)
-            r.prefill_start = now
+            self.pool.allocate(r.rid, need)
+            if r.prefill_start is None:
+                r.prefill_start = now
             r.phase = Phase.PREFILL
-            batch.append(self.pending.pop(0))
-            self.slot_req[slot] = batch[-1]
-            batch[-1]._slot = slot                          # type: ignore
+            self.pending.pop(0)
+            batch.append(r)
+            self.slot_req[slot] = r
+            r._slot = slot                                  # type: ignore
+            self.buffer.state.prefill.queue_wait[r.rid] = now - r.arrival
         if not batch:
             return False
 
-        plen = max(r.prompt_len for r in batch)
+        lens = [self._resume_len(r) for r in batch]
+        plen = max(lens)
         toks = np.zeros((len(batch), plen), np.int32)
         for i, r in enumerate(batch):
-            toks[i, :r.prompt_len] = r._prompt[:plen]       # type: ignore
-        lengths = jnp.asarray([r.prompt_len for r in batch])
+            seq = r._prompt                                 # type: ignore
+            prefix = self.outputs.get(r.rid)
+            if prefix:
+                seq = np.concatenate([seq, np.asarray(prefix, np.int32)])
+            toks[i, :lens[i]] = seq
+        lengths = jnp.asarray(lens)
         x = _embed_prompt(self.params, jnp.asarray(toks), cfg=self.cfg)
         positions = jnp.arange(plen)[None, :]
-
-        # temporary per-batch cache (migrated slot-wise afterwards)
+        # temporary per-batch cache (migrated slot-wise at handoff)
         tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
                                  jax.tree.leaves(self.cache)[0].dtype)
-        entries = []
-        for rep in range(self.cfg.n_pattern_repeats):
-            # ---- scheduling cycle between layer groups (§3.3.1) -------
-            state = self.buffer.read()
-            decision = self.scheduler.schedule(
-                state, now, [(r.rid, r.arrival, r.prompt_len)
-                             for r in self.pending])
-            part = self.rm.switch(decision.resources)
-            self.stats.reconfigs += 1
-            self.buffer.write(lambda s: setattr(
-                s.resources, "prefill_units", part.prefill_units))
-            p_slice = jax.tree.map(lambda a: a[rep], self.params["blocks"],
-                                   is_leaf=lambda a: hasattr(a, "shape"))
-            c_slice = jax.tree.map(lambda a: a[rep], tmp_cache["blocks"],
-                                   is_leaf=lambda a: hasattr(a, "shape"))
-            x, new_entries = _prefill_group(
-                p_slice, x, positions, c_slice, lengths,
-                cfg=self.cfg, repeat=rep)
-            entries.append(new_entries)
-            self.stats.prefill_cycles += 1
-            P = self.buffer.state.prefill
-            P.layers_done = (rep + 1) * len(self.cfg.pattern)
-            P.total_layers = self.cfg.n_layers
-            P.n_tokens = int(lengths.sum())
+        self.ptask = PrefillTask(batch, x, positions, lengths, tmp_cache,
+                                 n_tokens=int(sum(lens)))
+        P = self.buffer.state.prefill
+        P.active_rid = batch[0].rid
+        P.started_at = now
+        P.layers_done = 0
+        P.total_layers = self.cfg.n_layers
+        P.n_tokens = self.ptask.n_tokens
+        P.n_waiting = len(self.pending)
+        return True
 
-        first_tokens = _final_logits(self.params, x, lengths, cfg=self.cfg)
-        first_tokens = np.asarray(first_tokens)
+    def _prefill_step(self, now: float) -> bool:
+        """Launch ONE pattern-repeat group of the in-flight prefill, with a
+        scheduling cycle before it (§3.3.1); migrate to decode when the
+        last group completes. Decode iterations interleave between calls."""
+        task = self.ptask
+        if task is None:
+            return False
+        # ---- scheduling cycle between layer groups (§3.3.1) -----------
+        state = self.buffer.read()
+        decision = self.scheduler.schedule(state, now, self._pending_meta())
+        self._apply_reorder(decision.reorder)
+        self._switch(decision.resources)
+        rep = task.rep
+        p_slice = jax.tree.map(lambda a: a[rep], self.params["blocks"],
+                               is_leaf=lambda a: hasattr(a, "shape"))
+        c_slice = jax.tree.map(lambda a: a[rep], task.tmp_cache["blocks"],
+                               is_leaf=lambda a: hasattr(a, "shape"))
+        task.x, new_entries = _prefill_group(
+            p_slice, task.x, task.positions, c_slice, task.lengths,
+            cfg=self.cfg, repeat=rep)
+        task.entries.append(new_entries)
+        task.rep += 1
+        self.stats.prefill_cycles += 1
+        self.last_prefill_tokens = task.n_tokens
+        P = self.buffer.state.prefill
+        P.layers_done = task.rep * len(self.cfg.pattern)
+        for r in task.batch:
+            r.prefill_done_layers = P.layers_done
+        if task.rep >= self.cfg.n_pattern_repeats:
+            self._finish_prefill(task, now)
+            self.ptask = None
+        return True
 
-        # ---- migrate to decode: write cache rows into slots (handoff) --
-        for i, r in enumerate(batch):
+    def _finish_prefill(self, task: PrefillTask, now: float) -> None:
+        """Migrate the finished batch to decode: write cache rows into
+        slots (page-table/slot-index handoff only) and emit first tokens."""
+        first_tokens = np.asarray(
+            _final_logits(self.params, task.x, task.lengths, cfg=self.cfg))
+        P = self.buffer.state.prefill
+        for i, r in enumerate(task.batch):
             slot = r._slot                                  # type: ignore
             for j in range(len(self.cfg.pattern)):
                 for key in self.cache["blocks"][j]:
-                    stacked = jnp.stack([entries[rep][j][key][i]
-                                         for rep in range(len(entries))])
+                    stacked = jnp.stack(
+                        [task.entries[rep][j][key][i]
+                         for rep in range(len(task.entries))])
                     self.cache["blocks"][j][key] = _write_slot(
                         self.cache["blocks"][j][key], stacked, slot)
+            tok = int(first_tokens[i])
+            prefix = self.outputs.get(r.rid)
+            if prefix is None:
+                self.outputs[r.rid] = [tok]
+                r.first_token_time = now
+            else:                         # resumed after preemption
+                prefix.append(tok)
+            r.generated = len(self.outputs[r.rid])
+            r.token_times.append(now)
             r.phase = Phase.DECODE
-            r.first_token_time = time.perf_counter()
-            r.generated = 1
-            self.outputs[r.rid] = [int(first_tokens[i])]
-            self.tokens = self.tokens.at[slot, 0].set(int(first_tokens[i]))
-            self.pos = self.pos.at[slot].set(r.prompt_len)
+            self.tokens = self.tokens.at[slot, 0].set(tok)
+            self.pos = self.pos.at[slot].set(r.prompt_len + r.generated - 1)
             self.active = self.active.at[slot].set(True)
             self.pool.migrate(r.rid)
             self.stats.migrated += 1
             self.buffer.write(lambda s, rid=r.rid: s.ready_for_decode.append(
-                (rid, self.outputs[rid][0])))
-        return True
+                (rid, self.outputs[rid][-1])))
+            if self.on_token is not None:
+                self.on_token(r, tok, now)
+            if (r.generated >= r.output_len
+                    or r.prompt_len + r.generated >= self.max_len):
+                self._finish_request(r, slot, now)
+        # prefill engine is idle until the next admission
+        P.active_rid = None
+        P.layers_done = 0
+        P.n_tokens = 0
 
+    def _finish_request(self, r: Request, slot: int, now: float) -> None:
+        r.phase = Phase.FINISHED
+        r.finish_time = now
+        self.finished.append(r)
+        self.pool.free(r.rid)
+        self.slot_req[slot] = None
+        self.active = self.active.at[slot].set(False)
+        self._drop_request_meta(r.rid)
+
+    def _drop_request_meta(self, rid: int) -> None:
+        """Prune per-request shared-buffer entries so a long-running online
+        server does not grow without bound."""
+        s = self.buffer.state
+        s.prefill.queue_wait.pop(rid, None)
+        s.decode.out_tokens.pop(rid, None)
+        s.decode.decode_time.pop(rid, None)
+        s.ready_for_decode = [e for e in s.ready_for_decode if e[0] != rid]
+
+    # -- decode engine ----------------------------------------------------
     def _decode_cycle(self, now: float) -> bool:
         if not bool(np.any(np.asarray(self.active))):
             return False
         # ---- scheduling cycle before the iteration (§3.3.1) ------------
         state = self.buffer.read()
-        decision = self.scheduler.schedule(
-            state, now, [(r.rid, r.arrival, r.prompt_len)
-                         for r in self.pending])
+        decision = self.scheduler.schedule(state, now, self._pending_meta())
+        self._apply_reorder(decision.reorder)
         if decision.pause_decode:
             self.stats.paused_cycles += 1
+            self.buffer.state.decode.paused = True
             return False
-        part = self.rm.switch(decision.resources)
-        self.buffer.write(lambda s: setattr(
-            s.resources, "decode_units", part.decode_units))
+        self.buffer.state.decode.paused = False
+        self._switch(decision.resources)
 
+        n_ran = int(np.asarray(self.active).sum())
         next_tokens, self.cache = _decode_iteration(
             self.params, self.cache, self.tokens, self.pos, self.active,
             cfg=self.cfg)
@@ -260,26 +444,45 @@ class BulletServer:
         for slot, r in enumerate(self.slot_req):
             if r is None or r.phase != Phase.DECODE:
                 continue
-            self.outputs[r.rid].append(int(nt[slot]))
+            tok = int(nt[slot])
+            self.outputs[r.rid].append(tok)
             r.generated += 1
-            self.pool.extend(r.rid, 1)
+            r.token_times.append(now)
             D.out_tokens[r.rid] = r.generated
-            D.decode_time[r.rid] = now - (r.first_token_time or now)
+            D.decode_time[r.rid] = now - (
+                r.first_token_time if r.first_token_time is not None else now)
+            if self.on_token is not None:
+                self.on_token(r, tok, now)
             if (r.generated >= r.output_len
                     or r.prompt_len + r.generated >= self.max_len):
-                r.phase = Phase.FINISHED
-                r.finish_time = time.perf_counter()
-                self.finished.append(r)
-                self.pool.free(r.rid)
-                self.slot_req[slot] = None
-                self.active = self.active.at[slot].set(False)
-                D.batch = [x.rid for x in self.slot_req
-                           if x is not None and x.phase == Phase.DECODE]
-        D.batch = [x.rid for x in self.slot_req
-                   if x is not None and x.phase == Phase.DECODE]
+                self._finish_request(r, slot, now)
+        live = [x for x in self.slot_req
+                if x is not None and x.phase == Phase.DECODE]
+        D.batch = [x.rid for x in live]
+        D.mean_context = (int(sum(x.prompt_len + x.generated for x in live)
+                              / len(live)) if live else 0)
+        self.last_decode = (n_ran, max(D.mean_context, 1))
         return True
 
     # -- main loop --------------------------------------------------------
+    def step(self, now: float) -> bool:
+        """One engine cycle at time ``now``: admit newly-pending prompts,
+        launch one prefill layer group, run one decode iteration. Returns
+        True if any engine did work. Drive this from an online frontend
+        (serving.frontend) or via :meth:`run` for offline batches."""
+        self.last_prefill_tokens = 0
+        self.last_decode = None
+        did_admit = self._admit_prefill(now)
+        did_p = self._prefill_step(now)
+        did_d = self._decode_cycle(now)
+        return did_admit or did_p or did_d
+
+    @property
+    def idle(self) -> bool:
+        """No queued, in-flight, or decoding work remains."""
+        return (not self.pending and self.ptask is None
+                and all(r is None for r in self.slot_req))
+
     def run(self, max_cycles: int = 10_000) -> Dict[int, List[int]]:
         """Drive both engines until all submitted requests finish."""
         t0 = time.perf_counter()
@@ -287,10 +490,7 @@ class BulletServer:
         while cycles < max_cycles:
             cycles += 1
             now = time.perf_counter() - t0
-            did_p = self._prefill_cycle(now)
-            did_d = self._decode_cycle(now)
-            if not did_p and not did_d and not self.pending:
-                if all(r is None for r in self.slot_req):
-                    break
+            if not self.step(now) and self.idle:
+                break
         self.pool.check_invariants()
         return self.outputs

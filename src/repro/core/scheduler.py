@@ -155,7 +155,9 @@ class SLOScheduler:
         # §3.3.3 borrow: while a prefill is resident, running it exclusively
         # (no contention, full units) beats any co-run split as long as the
         # projected cumulative TPOTs keep their margin. Bounded by
-        # max_decode_pause_cycles so decode always makes progress.
+        # max_decode_pause_cycles so decode always makes progress. When TTFT
+        # is already violated, any exclusive speedup justifies borrowing —
+        # the gain threshold only gates the proactive (SLOs-met) branch.
         pause = False
         if state.prefill.n_tokens > 0 and state.decode.n_d:
             dt_pause = self.est.prefill_layer_time(
@@ -163,7 +165,8 @@ class SLOScheduler:
                 colocated=False) * self.sc.layer_group
             exclusive_gain = best_t / max(self.est.prefill_layer_time(
                 self.cfg, n_tok, 0, total, colocated=False), 1e-12)
-            if (exclusive_gain > 1.02 and self._pause_ok(state, dt_pause) and
+            if ((ttft_violated or exclusive_gain > 1.02) and
+                    self._pause_ok(state, dt_pause) and
                     self.decode_paused_cycles < self.sc.max_decode_pause_cycles):
                 pause = True
                 u, v = total, 0
@@ -190,17 +193,26 @@ class SLOScheduler:
                 total - self.sc.min_decode_units)
         return Decision(ResourceStatus(u, total - u), reason="balanced")
 
+    def reorder_pending(self, state: SystemState, now: float,
+                        pending: List[Tuple[int, float, int]],
+                        ttfts: Optional[Dict[int, float]] = None
+                        ) -> List[int]:
+        """Slack-sorted pending order (Algorithm 1 line 7 "sort") — the
+        admission-time subset of ``schedule`` (no resource search, no
+        pause-counter side effects)."""
+        if ttfts is None:
+            ttfts = self.estimate_ttfts(state, now, pending)
+        return sorted(
+            (rid for rid, _, _ in pending),
+            key=lambda rid: self.slo.norm_ttft_ms - ttfts.get(rid, 0.0))
+
     # -- main entry (Algorithm 1) --------------------------------------
     def schedule(self, state: SystemState, now: float,
                  pending: List[Tuple[int, float, int]]) -> Decision:
         total = self.est.hw.total_units
         ttfts = self.estimate_ttfts(state, now, pending)
         tpots = self.observed_tpots(state)
-
-        # reorder pending by estimated slack (line 7 "sort")
-        order = sorted(
-            (rid for rid, _, _ in pending),
-            key=lambda rid: self.slo.norm_ttft_ms - ttfts.get(rid, 0.0))
+        order = self.reorder_pending(state, now, pending, ttfts)
 
         q = self.sc.p_quantile
         # proactive: act before the estimate actually crosses the SLO

@@ -51,6 +51,10 @@ class PagedKVPool:
     def can_admit(self, n_tokens: int) -> bool:
         return self._blocks_for(n_tokens) <= self.free_blocks
 
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to cover ``n_tokens``."""
+        return self._blocks_for(n_tokens)
+
     def _blocks_for(self, n: int) -> int:
         return -(-n // self.block_size)
 
@@ -83,6 +87,16 @@ class PagedKVPool:
         """Prefill→decode handoff: returns the page table (indices only —
         no data movement; both engines map the same pool)."""
         return self._tables[rid]
+
+    def preempt(self, rid: int) -> int:
+        """Decode→queue eviction under KV pressure (§3.5.2): release all of
+        the victim's blocks and return how many tokens they covered. The
+        caller requeues the request with its generated prefix; re-admission
+        reserves fresh blocks for prompt + prefix + remaining output."""
+        table = self._tables.get(rid)
+        held = table.n_tokens if table is not None else 0
+        self.free(rid)
+        return held
 
     def free(self, rid: int) -> int:
         """Release a finished request's blocks. Idempotent."""

@@ -128,11 +128,16 @@ def _dot_flops(op: OpInfo, comp: Computation) -> float:
     out_elems = 1
     for d in _shape_dims(op.out_type):
         out_elems *= d
-    # lhs operand: first %name after "dot("
+    # lhs operand: first %name after "dot(" — older XLA prints the operand
+    # type inline ("dot(f32[64,128]{1,0} %Arg_0.1, ...)"), newer only the name
     rest = (op.line.split(op.kind + "(", 1)[1]
             if op.kind + "(" in op.line else op.line)
-    m = re.match(r"\s*%?([\w.\-]+)", rest)
-    lhs_type = comp.types.get(m.group(1), "") if m else ""
+    tm = re.match(r"\s*([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+%?[\w.\-]+", rest)
+    if tm:
+        lhs_type = tm.group(1)
+    else:
+        m = re.match(r"\s*%?([\w.\-]+)", rest)
+        lhs_type = comp.types.get(m.group(1), "") if m else ""
     dims = _shape_dims(lhs_type)
     cm = _CONTRACT_RE.search(op.line)
     k = 1
@@ -234,7 +239,9 @@ def analyze_hlo(hlo_text: str) -> RooflineReport:
                     if k == "fusion" and cm:
                         report.hbm_bytes += _fusion_traffic(
                             op, comp, cm.group(1)) * mult
-                    else:
+                    elif not cm:
+                        # unresolvable callee: charge the call site itself
+                        # (a resolvable call's traffic is counted inside)
                         report.hbm_bytes += _op_traffic(op, comp) * mult
                 if cm and k == "call":
                     visit(cm.group(1), mult, inside_fusion, depth + 1)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.models.sharding import shard_map as _shard_map
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
@@ -261,7 +263,7 @@ def seq_parallel_decode_attention(q, k_cache, v_cache, kv_positions, pos, *,
         return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kh * g, dd
                                                     ).astype(q.dtype)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(bax), P(bax, axis), P(bax, axis), P(bax, axis), P(bax)),
         out_specs=P(bax),
@@ -296,7 +298,7 @@ def write_cache_slot_seq_sharded(cache, new, slot, *, mesh, axis: str,
             return jnp.where(ow, written, ci)
         return jax.vmap(upd)(c, n, clamped, owns)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(bax, axis), P(bax), P(bax)),
         out_specs=P(bax, axis),

@@ -1,0 +1,169 @@
+"""Online serving frontend: arrival-clocked admission over the real engine.
+
+Bridges the sim/real gap: the same ``generate_trace`` workloads the
+discrete-event simulator consumes (core/simulate.py) replay against the
+real ``BulletServer`` (core/engine.py), with requests released into the
+engine's pending queue by arrival timestamp against a pluggable clock:
+
+- ``WallClock(speed)`` — real time, optionally compressed (``--time-scale``
+  in launch/serve.py): trace seconds elapse ``speed``× faster than wall
+  seconds, and all engine timestamps stay in trace coordinates.
+- ``VirtualClock`` — deterministic replay: time advances a fixed (or
+  estimator-predicted, see :func:`estimator_cycle_cost`) amount per engine
+  cycle and jumps across idle gaps, so two runs of the same trace produce
+  byte-identical outputs and metrics regardless of host speed.
+
+Tokens stream back through per-request callbacks the moment the engine
+emits them (first token at prefill→decode migration, then one per decode
+iteration), and a run aggregates into the same ``ServingMetrics`` the
+simulator reports — ``--mode replay`` and ``--mode sim`` rows are directly
+comparable on the same trace.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import BulletServer
+from repro.serving.request import Request, ServingMetrics
+
+
+class WallClock:
+    """Monotonic trace-time clock; ``speed`` > 1 compresses replay."""
+
+    def __init__(self, speed: float = 1.0):
+        assert speed > 0
+        self.speed = speed
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return (time.perf_counter() - self._t0) * self.speed
+
+    def sleep_until(self, t: float) -> None:
+        dt = (t - self.now()) / self.speed
+        if dt > 0:
+            time.sleep(min(dt, 1.0))
+
+
+class VirtualClock:
+    """Deterministic replay clock: advances only when told to."""
+
+    def __init__(self, cycle_dt: float = 1e-3):
+        assert cycle_dt > 0
+        self.cycle_dt = cycle_dt
+        self._t = 0.0
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: Optional[float] = None) -> None:
+        self._t += self.cycle_dt if dt is None else max(dt, 0.0)
+
+    def sleep_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+
+def estimator_cycle_cost(server: BulletServer) -> float:
+    """Predicted duration of the engine cycle that just ran: a prefill
+    layer group co-run with a decode iteration (max of the two — they
+    share the device spatially). Reads the engine's last_prefill_tokens /
+    last_decode record of what step() actually executed, so a prefill's
+    final group and the draining decode iterations are charged too. Lets
+    a VirtualClock replay advance on the same PerfEstimator timeline the
+    simulator runs on."""
+    est, cfg = server.est, server.cfg
+    R = server.buffer.state.resources
+    dt = 0.0
+    if server.last_prefill_tokens:
+        dt = max(dt, est.prefill_layer_time(
+            cfg, server.last_prefill_tokens, 0, max(R.prefill_units, 1),
+            colocated=server.last_decode is not None) * len(cfg.pattern))
+    if server.last_decode is not None:
+        n_d, ctx = server.last_decode
+        dt = max(dt, est.decode_iter_time(
+            cfg, max(n_d, 1), max(ctx, 1), max(R.decode_units, 1),
+            colocated=server.last_prefill_tokens > 0))
+    return dt if dt > 0 else 1e-4
+
+
+class OnlineFrontend:
+    """Owns the request queue in front of a BulletServer: releases requests
+    into the engine by arrival time, drives engine cycles, dispatches
+    streaming callbacks, and aggregates ServingMetrics."""
+
+    def __init__(self, server: BulletServer, clock=None, *,
+                 cycle_cost: Optional[Callable[[BulletServer], float]] = None,
+                 on_token: Optional[Callable[[Request, int, float], None]] = None):
+        self.server = server
+        self.clock = clock if clock is not None else WallClock()
+        self.cycle_cost = cycle_cost
+        self.on_token = on_token
+        self.requests: List[Request] = []
+        self.admitted_order: List[int] = []
+        #: set by run(): True when max_cycles elapsed with work remaining,
+        #: i.e. the metrics cover only the completed subset
+        self.truncated = False
+        self._queue: List[Tuple[Request, np.ndarray]] = []
+        self._cbs: Dict[int, Callable[[Request, int, float], None]] = {}
+        self._chained_hook = server.on_token     # preserve a caller-set hook
+        server.on_token = self._dispatch
+
+    # -- ingress --------------------------------------------------------
+    def submit(self, req: Request, prompt_tokens: np.ndarray,
+               on_token: Optional[Callable[[Request, int, float], None]] = None
+               ) -> None:
+        """Enqueue a request for release at ``req.arrival`` (trace time)."""
+        self.requests.append(req)
+        self._queue.append((req, np.asarray(prompt_tokens, np.int32)))
+        if on_token is not None:
+            self._cbs[req.rid] = on_token
+
+    def submit_trace(self, trace: List[Request], vocab_size: int,
+                     seed: int = 0) -> None:
+        """Attach synthetic prompt tokens to a generate_trace workload."""
+        rng = np.random.default_rng(seed)
+        for r in trace:
+            self.submit(r, rng.integers(0, vocab_size, r.prompt_len,
+                                        dtype=np.int32))
+
+    def _dispatch(self, req: Request, token: int, now: float) -> None:
+        cb = self._cbs.get(req.rid)
+        if cb is not None:
+            cb(req, token, now)
+        if self.on_token is not None:
+            self.on_token(req, token, now)
+        if self._chained_hook is not None:
+            self._chained_hook(req, token, now)
+
+    # -- replay loop ----------------------------------------------------
+    def run(self, max_cycles: int = 200_000) -> ServingMetrics:
+        """Replay the submitted trace to completion (or ``max_cycles``)."""
+        self._queue.sort(key=lambda e: (e[0].arrival, e[0].rid))
+        i = 0
+        cycles = 0
+        while cycles < max_cycles:
+            cycles += 1
+            now = self.clock.now()
+            while i < len(self._queue) and self._queue[i][0].arrival <= now:
+                req, toks = self._queue[i]
+                i += 1
+                self.server.submit(req, toks)
+                self.admitted_order.append(req.rid)
+            did = self.server.step(now)
+            if isinstance(self.clock, VirtualClock):
+                self.clock.advance(self.cycle_cost(self.server)
+                                   if self.cycle_cost else None)
+            if not did and self.server.idle:
+                if i < len(self._queue):        # idle gap: next arrival
+                    self.clock.sleep_until(self._queue[i][0].arrival)
+                    continue
+                break
+        self.truncated = i < len(self._queue) or not self.server.idle
+        self.server.pool.check_invariants()
+        return self.metrics()
+
+    def metrics(self) -> ServingMetrics:
+        return ServingMetrics.from_requests(self.requests, self.server.slo)

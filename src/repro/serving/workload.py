@@ -55,6 +55,15 @@ DATASETS = {
 }
 
 
+def fit_trace_to_context(trace: List[Request], max_len: int) -> List[Request]:
+    """Clamp a trace's dataset-shaped lengths onto a reduced context window
+    (real-engine replay of full-scale workloads). Mutates and returns it."""
+    for r in trace:
+        r.prompt_len = max(4, min(r.prompt_len, max_len // 2))
+        r.output_len = max(2, min(r.output_len, max_len - r.prompt_len - 1))
+    return trace
+
+
 def generate_trace(dataset: str, rate_req_s: float, duration_s: float,
                    seed: int = 0, max_requests: int = 0) -> List[Request]:
     """Poisson arrival process at ``rate_req_s`` for ``duration_s``."""

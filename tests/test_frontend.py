@@ -1,0 +1,264 @@
+"""Online serving frontend over the real engine: virtual-clock replay
+determinism, temporal interleaving (decode between prefill layer groups),
+KV-pressure preemption, resumable-prefill fidelity, reorder admission,
+and streaming callbacks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import BulletServer
+from repro.kvcache.paged import PagedKVPool
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving.frontend import (OnlineFrontend, VirtualClock, WallClock,
+                                    estimator_cycle_cost)
+from repro.core.scheduler import SchedulerConfig
+from repro.serving.request import Phase, Request, SLO
+from repro.serving.workload import generate_trace
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def setup_deep():
+    """3 pattern repeats -> 3 layer-group launches per prefill."""
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=3)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def mk_server(cfg, params, **kw):
+    kw.setdefault("slo", SLO(3.0, 150.0))
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    return BulletServer(cfg, params, **kw)
+
+
+def replay(cfg, params, trace, prompts, **kw):
+    server = mk_server(cfg, params, **kw)
+    fe = OnlineFrontend(server, VirtualClock(cycle_dt=1e-3))
+    for r, toks in zip(trace, prompts):
+        fe.submit(r, toks)
+    m = fe.run()
+    return server, fe, m
+
+
+def small_trace(cfg, n=8, seed=3):
+    trace = generate_trace("sharegpt", rate_req_s=200.0, duration_s=10.0,
+                           seed=seed, max_requests=n)
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for r in trace:
+        r.prompt_len = max(4, min(r.prompt_len, 16))
+        r.output_len = max(2, min(r.output_len, 8))
+        prompts.append(rng.integers(0, cfg.vocab_size, r.prompt_len,
+                                    dtype=np.int32))
+    return trace, prompts
+
+
+def clone(trace):
+    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+                    output_len=r.output_len) for r in trace]
+
+
+def test_virtual_replay_deterministic(setup):
+    """Two replays of the same trace on fresh servers: identical outputs,
+    admission order, and metrics (virtual time is host-speed independent)."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    runs = []
+    for _ in range(2):
+        server, fe, m = replay(cfg, params, clone(trace), prompts)
+        runs.append((dict(server.outputs), list(fe.admitted_order), m))
+    out0, order0, m0 = runs[0]
+    out1, order1, m1 = runs[1]
+    assert out0 == out1
+    assert order0 == order1
+    assert m0 == m1
+    assert m0.n_requests == len(trace)
+    assert m0.goodput > 0
+
+
+def test_decode_interleaves_between_layer_groups(setup_deep):
+    """Paper §3.5 temporal sharing on the real path: while a long prefill
+    is mid-flight (between layer-group launches), decode iterations for
+    already-migrated requests keep running."""
+    cfg, params = setup_deep
+    assert cfg.n_pattern_repeats == 3
+    # disable the §3.3.3 decode-pause borrow: this test asserts the co-run
+    # path, where decode proceeds between layer-group launches
+    server = mk_server(cfg, params, max_slots=2, max_len=48,
+                       max_prefill_batch=1,
+                       sched=SchedulerConfig(max_decode_pause_cycles=0))
+    rng = np.random.default_rng(0)
+    r0 = Request(rid=0, arrival=0.0, prompt_len=6, output_len=16)
+    server.submit(r0, rng.integers(0, cfg.vocab_size, 6))
+    now = 0.0
+    # run r0's prefill to completion so it sits in decode
+    while r0.phase != Phase.DECODE:
+        server.step(now)
+        now += 1e-3
+    r1 = Request(rid=1, arrival=now, prompt_len=20, output_len=4)
+    server.submit(r1, rng.integers(0, cfg.vocab_size, 20))
+    interleaved = 0
+    while r1.phase != Phase.DECODE and r0.phase == Phase.DECODE:
+        before = server.stats.decode_iterations
+        server.step(now)
+        now += 1e-3
+        mid_prefill = (server.ptask is not None
+                       and 0 < server.ptask.rep < cfg.n_pattern_repeats)
+        if server.stats.decode_iterations > before and mid_prefill:
+            interleaved += 1
+    assert interleaved >= 1, \
+        "no decode iteration ran between prefill layer groups"
+    server.run()          # drain
+    assert r0.phase == Phase.FINISHED and r1.phase == Phase.FINISHED
+
+
+def test_preemption_preserves_invariants_and_completion(setup):
+    """When the pool cannot admit an older request, the youngest decode
+    slot is evicted (pages freed, request requeued with its prefix); all
+    requests still finish with exactly output_len tokens."""
+    cfg, params = setup
+    server = mk_server(cfg, params, max_slots=2, max_len=40,
+                       max_prefill_batch=1)
+    server.pool = PagedKVPool(48, block_size=16)     # 3 blocks: force pressure
+    rng = np.random.default_rng(1)
+    young = Request(rid=0, arrival=1.0, prompt_len=8, output_len=12)
+    server.submit(young, rng.integers(0, cfg.vocab_size, 8))
+    now = 1.0
+    while young.phase != Phase.DECODE:
+        server.step(now)
+        now += 1e-3
+    # a few decode steps so the victim has a prefix to resume from
+    for _ in range(3):
+        server.step(now)
+        now += 1e-3
+    assert young.generated >= 2
+    old = Request(rid=1, arrival=0.0, prompt_len=30, output_len=4)
+    server.submit(old, rng.integers(0, cfg.vocab_size, 30))
+    # old needs ceil(34/16)=3 blocks but young holds one: must preempt
+    while old.phase == Phase.QUEUED:
+        server.step(now)
+        now += 1e-3
+    assert server.stats.preempted == 1
+    assert young.phase == Phase.QUEUED       # evicted, waiting to resume
+    server.pool.check_invariants()
+    server.run()
+    server.pool.check_invariants()
+    assert old.phase == Phase.FINISHED
+    assert young.phase == Phase.FINISHED
+    assert len(server.outputs[0]) == young.output_len == 12
+    assert len(server.outputs[1]) == old.output_len == 4
+    assert server.pool.free_blocks == server.pool.n_blocks
+
+
+def test_pool_reservation_prevents_decode_overcommit(setup):
+    """Two equal-arrival requests whose combined prompt+output footprint
+    exceeds the pool: admission reserves the full footprint, so the second
+    waits (no preemption between equal arrivals) instead of both being
+    admitted and crashing with OutOfBlocks mid-decode."""
+    cfg, params = setup
+    server = mk_server(cfg, params, max_slots=2, max_len=40,
+                       max_prefill_batch=2)
+    server.pool = PagedKVPool(48, block_size=16)     # 3 blocks
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=8, output_len=24)
+            for i in range(2)]
+    for r in reqs:
+        server.submit(r, rng.integers(0, cfg.vocab_size, 8))
+    out = server.run()                               # must not raise
+    assert server.stats.preempted == 0
+    assert all(len(out[r.rid]) == 24 for r in reqs)
+    assert server.pool.free_blocks == server.pool.n_blocks
+
+
+def test_resumable_prefill_matches_monolithic(setup_deep):
+    """Layer-group-resumable prefill (with decode interleaved between
+    groups) is token-exact vs the offline prefill+decode reference."""
+    cfg, params = setup_deep
+    rng = np.random.default_rng(2)
+    trace, prompts = [], []
+    for rid in range(4):
+        plen = int(rng.integers(4, 16))
+        trace.append(Request(rid=rid, arrival=0.01 * rid, prompt_len=plen,
+                             output_len=5))
+        prompts.append(rng.integers(0, cfg.vocab_size, plen))
+    server, _, _ = replay(cfg, params, trace, prompts)
+    for r, prompt in zip(trace, prompts):
+        cache = init_cache(cfg, 1, 48, jnp.float32)
+        lg, cache = prefill(params, jnp.asarray(prompt)[None],
+                            jnp.array([len(prompt)]), cache, cfg)
+        want = [int(jnp.argmax(lg[0]))]
+        pos = len(prompt)
+        for _ in range(r.output_len - 1):
+            lg, cache = decode_step(params, cache,
+                                    jnp.asarray([[want[-1]]]),
+                                    jnp.asarray([pos]), cfg)
+            want.append(int(jnp.argmax(lg[0])))
+            pos += 1
+        assert server.outputs[r.rid] == want, r.rid
+
+
+def test_reorder_changes_admission_order(setup):
+    """Decision.reorder is honored: a stale low-slack request overtakes a
+    fresh one that arrived at the head of the FIFO queue."""
+    cfg, params = setup
+    server = mk_server(cfg, params, max_prefill_batch=1)
+    rng = np.random.default_rng(4)
+    fresh = Request(rid=0, arrival=6.0, prompt_len=8, output_len=2)
+    stale = Request(rid=1, arrival=0.0, prompt_len=8, output_len=2)
+    server.submit(fresh, rng.integers(0, cfg.vocab_size, 8))
+    server.submit(stale, rng.integers(0, cfg.vocab_size, 8))
+    assert [r.rid for r in server.pending] == [0, 1]     # FIFO ingress
+    assert server._admit_prefill(6.05)
+    # the scheduler's slack sort put the stale request first
+    assert server.ptask.batch[0].rid == stale.rid
+    assert stale.phase == Phase.PREFILL
+    assert fresh.phase == Phase.QUEUED
+
+
+def test_streaming_callbacks_and_wall_clock(setup):
+    """Per-request callbacks fire once per token, in order, with
+    monotonically non-decreasing timestamps; WallClock replay works."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg, n=4, seed=5)
+    server = mk_server(cfg, params)
+    fe = OnlineFrontend(server, WallClock(speed=1000.0))
+    got = {}
+    times = []
+    for r, toks in zip(trace, prompts):
+        fe.submit(r, toks, on_token=lambda req, tok, t: (
+            got.setdefault(req.rid, []).append(tok), times.append(t)))
+    m = fe.run()
+    assert m.n_requests == len(trace)
+    for r in trace:
+        assert got[r.rid] == server.outputs[r.rid]
+        assert len(got[r.rid]) == r.output_len
+    assert times == sorted(times)
+
+
+def test_replay_metrics_comparable_to_sim_trace(setup):
+    """The frontend reports ServingMetrics from the same generate_trace
+    workload the simulator consumes — nonzero goodput, finite latencies,
+    estimator-clocked virtual time."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg, n=6, seed=6)
+    server = mk_server(cfg, params)
+    fe = OnlineFrontend(server, VirtualClock(),
+                        cycle_cost=estimator_cycle_cost)
+    for r, toks in zip(trace, prompts):
+        fe.submit(r, toks)
+    m = fe.run()
+    assert m.n_requests == 6
+    assert m.goodput > 0
+    assert m.throughput_tok_s > 0
+    assert np.isfinite(m.mean_ttft_s) and m.mean_ttft_s >= 0
+    assert np.isfinite(m.mean_tpot_ms)
