@@ -1,0 +1,100 @@
+"""Dense vs block-paged decode attention across cache occupancy.
+
+The dense slot cache streams the full ``(B, max_len)`` region every
+iteration, so decode HBM traffic scales with *capacity*; the block-paged
+kernel streams ``ceil(ctx/ps)`` pages per slot, so traffic scales with
+*live context*. This module reports, per occupancy level:
+
+- modeled KV HBM bytes for both layouts (``core.analytics.decode_cost``
+  with per-slot ``contexts`` — dense charges ``max_len`` per slot because
+  that is what the dense kernel reads; paged charges the page-rounded live
+  context), and
+- wall time of the two attention ops (interpret mode off-TPU: correctness
+  plumbing, not a hardware number — the modeled bytes are the headline).
+
+``REPRO_SMOKE=1`` shrinks shapes for the CI smoke step.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import analytics as A
+from repro.kernels import decode_attention_op, paged_decode_attention_op
+
+PAGE = 16
+OCCUPANCIES = (0.10, 0.25, 0.50, 0.90)
+
+
+def _wall(fn, *args, reps: int = 3, **kw) -> float:
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(emit) -> None:
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    cfg = get_config("qwen3-1.7b").reduced()
+    b = 2 if smoke else 4
+    max_len = 64 if smoke else 256
+    kh, g, d = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.head_dim
+    h = kh * g
+    max_blocks = max_len // PAGE
+    n_pages = b * max_blocks
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, max_len, kh, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, max_len, kh, d), jnp.float32)
+    # paged pool holding the same values: slot i owns pages
+    # [i*max_blocks, (i+1)*max_blocks) so gathers reproduce the dense rows
+    kp = jnp.concatenate([kc.reshape(n_pages, PAGE, kh, d),
+                          jnp.zeros((1, PAGE, kh, d))])
+    vp = jnp.concatenate([vc.reshape(n_pages, PAGE, kh, d),
+                          jnp.zeros((1, PAGE, kh, d))])
+    kvpos = jnp.broadcast_to(jnp.arange(max_len)[None], (b, max_len))
+    full_tables = np.arange(n_pages, dtype=np.int32).reshape(b, max_blocks)
+
+    emit("# paged_decode: occupancy,ctx,dense_kv_mb,paged_kv_mb,"
+         "bytes_ratio,dense_ms,paged_ms")
+    at_25 = None
+    for occ in OCCUPANCIES:
+        ctx = max(1, int(occ * max_len))
+        contexts = [ctx] * b
+        pos = jnp.full((b,), ctx - 1, jnp.int32)
+        # bucketed live-page grid, as the engine slices it
+        n_b = max(1, -(-ctx // PAGE))
+        bt = jnp.asarray(full_tables[:, :n_b])
+
+        dense_bytes = A.decode_cost(cfg, b, max_len,
+                                    contexts=[max_len] * b).kv_bytes
+        paged_bytes = A.decode_cost(cfg, b, ctx, contexts=contexts,
+                                    page_size=PAGE).kv_bytes
+        t_dense = _wall(decode_attention_op, q, kc, vc, kvpos, pos)
+        t_paged = _wall(paged_decode_attention_op, q, kp, vp, bt, pos)
+
+        # numerics cross-check while we are here (same values both layouts)
+        od = decode_attention_op(q, kc, vc, kvpos, pos)
+        op = paged_decode_attention_op(q, kp, vp, bt, pos)
+        assert np.allclose(np.asarray(od), np.asarray(op), atol=1e-5), occ
+
+        ratio = dense_bytes / max(paged_bytes, 1.0)
+        if abs(occ - 0.25) < 1e-9:
+            at_25 = ratio
+        emit(f"paged_decode,occ={occ:.2f},ctx={ctx},"
+             f"{dense_bytes/2**20:.3f},{paged_bytes/2**20:.3f},"
+             f"{ratio:.2f},{t_dense*1e3:.2f},{t_paged*1e3:.2f}")
+    if at_25 is not None:
+        emit(f"paged_decode-headline,bytes_reduction_at_25pct_occupancy,"
+             f"{at_25:.2f}x")

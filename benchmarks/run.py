@@ -22,6 +22,7 @@ BENCHES = [
     ("replay_vs_sim", "benchmarks.replay_vs_sim"),
     ("table3_overheads", "benchmarks.overheads"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("paged_decode", "benchmarks.paged_decode_attention"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 

@@ -10,6 +10,7 @@ the two is the useful-compute metric.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Sequence
 
 from repro.configs.base import ATTN, MLP, MOE, RGLRU, SSD, SWA, BlockSpec, ModelConfig
 
@@ -105,9 +106,37 @@ def block_prefill_cost(cfg: ModelConfig, blk: BlockSpec, n_tokens: int,
     return PhaseCost(gemm + attn, bytes_, gemm, attn, wb, kvb)
 
 
+def _decode_spans(cfg: ModelConfig, blk: BlockSpec, batch: int, ctx: int,
+                  contexts: Optional[Sequence[int]],
+                  page_size: Optional[int]) -> float:
+    """Summed per-slot KV span one decode iteration streams for one
+    attention block. ``contexts`` charges each slot its own live context
+    (a collapsed ``batch × mean`` hides the truncation and the per-slot
+    window clamp); ``page_size`` rounds each span up to whole pages — what
+    the block-paged kernel actually fetches. The uniform case stays O(1):
+    this sits on the scheduler/simulator hot path."""
+    if contexts is None:
+        span = min(cfg.sliding_window, ctx) if blk.mixer == SWA else ctx
+        if page_size:
+            span = -(-span // page_size) * page_size
+        return float(batch) * span
+    total = 0.0
+    for c in contexts:
+        span = min(cfg.sliding_window, c) if blk.mixer == SWA else c
+        if page_size:
+            span = -(-span // page_size) * page_size
+        total += span
+    return total
+
+
 def block_decode_cost(cfg: ModelConfig, blk: BlockSpec, batch: int,
-                      ctx: int, dtype_bytes: int = 2) -> PhaseCost:
-    """One decode iteration for ``batch`` requests at mean context ``ctx``."""
+                      ctx: int, dtype_bytes: int = 2, *,
+                      contexts: Optional[Sequence[int]] = None,
+                      page_size: Optional[int] = None) -> PhaseCost:
+    """One decode iteration for ``batch`` requests at mean context ``ctx``
+    (or exact per-slot ``contexts``; see :func:`_decode_spans`)."""
+    if contexts is not None:
+        batch = len(contexts)
     d = cfg.d_model
     gemm = attn = 0.0
     kvb = 0.0
@@ -117,9 +146,9 @@ def block_decode_cost(cfg: ModelConfig, blk: BlockSpec, batch: int,
     if blk.mixer in (ATTN, SWA):
         h, k, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
         gemm += 2 * batch * d * (h + 2 * k) * dh + 2 * batch * h * dh * d
-        span = min(cfg.sliding_window, ctx) if blk.mixer == SWA else ctx
-        attn += 2 * 2 * batch * span * h * dh
-        kvb += batch * _attn_kv_bytes(cfg, span, 1)         # cache read
+        span_sum = _decode_spans(cfg, blk, batch, ctx, contexts, page_size)
+        attn += 2 * 2 * span_sum * h * dh
+        kvb += _attn_kv_bytes(cfg, span_sum, 1)             # cache read
         kvb += 2 * batch * k * dh * dtype_bytes             # cache write
         bytes_ += kvb
     elif blk.mixer == RGLRU:
@@ -165,8 +194,17 @@ def prefill_cost(cfg: ModelConfig, n_tokens: int, ctx_start: int = 0,
                      c.weight_bytes + head / 2, c.kv_bytes)
 
 
-def decode_cost(cfg: ModelConfig, batch: int, ctx: int) -> PhaseCost:
-    c = _model_cost(cfg, lambda blk: block_decode_cost(cfg, blk, batch, ctx))
+def decode_cost(cfg: ModelConfig, batch: int, ctx: int, *,
+                contexts: Optional[Sequence[int]] = None,
+                page_size: Optional[int] = None) -> PhaseCost:
+    """One decode iteration. ``contexts`` switches the KV terms from the
+    ``batch × mean`` collapse to exact per-slot live contexts, and
+    ``page_size`` quantizes each span to whole pages (the block-paged
+    cache's streaming granularity)."""
+    if contexts is not None:
+        batch = len(contexts)
+    c = _model_cost(cfg, lambda blk: block_decode_cost(
+        cfg, blk, batch, ctx, contexts=contexts, page_size=page_size))
     head = 2 * batch * cfg.d_model * cfg.vocab_size
     head_bytes = cfg.d_model * cfg.vocab_size * 2
     return PhaseCost(c.flops + head, c.hbm_bytes + head_bytes,

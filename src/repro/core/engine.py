@@ -12,11 +12,18 @@ KV pool, each running a decentralized scheduling loop:
   one jit executable reused every iteration), reading global state from
   the shared buffer first.
 
-On-device caches are a fixed-slot dense pool ((R, slots, S, K, D) per
-pattern position) written in place via donation — the functional analogue
-of the cudaIpc shared pool (admission bookkeeping lives in
-kvcache.PagedKVPool). JAX async dispatch lets the host run scheduling while
-the device executes, mirroring the paper's decoupled CPU/GPU control flow.
+On-device caches default to a **block-paged page pool** ((R, pages+1, ps,
+K, D) per pattern position) driven by ``PagedKVPool``'s block tables:
+prefill scatters KV straight into pooled pages (no ``max_len``-row
+migration copy), decode streams only live pages through the paged Pallas
+kernel (grid bucketed over the max live page count to bound recompiles),
+and preempt / resume / migrate move block ownership in the table instead
+of re-laying-out device rows. Architectures the paged layout cannot cover
+(ring windows, recurrent states, cross-attention) fall back to the dense
+fixed-slot pool ((R, slots, S, K, D)) written in place via donation —
+both are functional analogues of the cudaIpc shared pool. JAX async
+dispatch lets the host run scheduling while the device executes,
+mirroring the paper's decoupled CPU/GPU control flow.
 """
 
 from __future__ import annotations
@@ -24,7 +31,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,11 +68,14 @@ def _prefill_group(params_slice, x, positions, cache_slice, lengths, *,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def _decode_iteration(params, cache, tokens, pos, active, *,
-                      cfg: ModelConfig):
+def _decode_iteration(params, cache, tokens, pos, active, block_tables=None,
+                      *, cfg: ModelConfig):
     """One continuous-batching decode iteration over all slots; inactive
-    slots are masked out of the sampled tokens."""
-    logits, cache = T.decode_step(params, cache, tokens, pos, cfg)
+    slots are masked out of the sampled tokens. ``block_tables`` (B, n_b)
+    switches to the block-paged cache layout — its (bucketed) width is the
+    paged kernel's grid depth."""
+    logits, cache = T.decode_step(params, cache, tokens, pos, cfg,
+                                  block_tables=block_tables)
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     next_tokens = jnp.where(active, next_tokens, 0)
     return next_tokens[:, None], cache
@@ -88,9 +98,37 @@ def _final_logits(params, x, lengths, *, cfg: ModelConfig):
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _write_slot(cache_leaf, src_leaf, slot):
-    """Copy one request's prefill cache row into its decode slot."""
+    """Copy one request's prefill cache row into its decode slot (dense
+    fallback path only — the paged path hands off block indices)."""
     return jax.lax.dynamic_update_index_in_dim(
         cache_leaf, src_leaf, slot, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_group_paged(params_slice, x, positions, *, cfg: ModelConfig):
+    """Run one pattern-repeat group over the prompt batch, returning the
+    raw full-sequence KV entries; the caller scatters them straight into
+    pooled pages — no dense ``max_len`` row is ever materialized."""
+    entries = []
+    for j, blk in enumerate(cfg.pattern):
+        x, entry, _ = T._apply_block_full(
+            x, params_slice[j], blk, cfg, None, positions, None)
+        entries.append((entry["k"], entry["v"]))
+    return x, tuple(entries)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_group_pages(cache_leaf, kv, page_map, rep):
+    """Scatter one layer group's prefill K/V into the pooled pages of
+    repeat ``rep``. cache_leaf: (R, P+1, ps, K, D) donated (in-place page
+    update); kv: (B, Sp, K, D); page_map: (B, ceil(Sp/ps)) physical pages
+    (trash page past each request's length)."""
+    ps = cache_leaf.shape[2]
+    pad = page_map.shape[1] * ps - kv.shape[1]
+    if pad:
+        kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kvb = kv.reshape(-1, ps, kv.shape[2], kv.shape[3]).astype(cache_leaf.dtype)
+    return cache_leaf.at[rep, page_map.reshape(-1)].set(kvb)
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +143,26 @@ class EngineStats:
     preempted: int = 0
 
 
+class DecodeWork(NamedTuple):
+    """What the most recent decode iteration actually executed — consumed
+    by virtual-clock replay / estimator feedback so the work charged is
+    the work that ran (per-slot live contexts, not a collapsed mean).
+
+    ``streamed`` is each running slot's share of the KV tokens the cache
+    stream actually fetched. Both kernels iterate over all ``max_slots``
+    rows: the paged grid streams the *bucketed max* live page count per
+    slot (dead columns and idle slots hit the trash page), the dense
+    kernel streams every slot's full ``max_len`` row — so the total is
+    ``max_slots × bucket·ps`` (paged) or ``max_slots × max_len`` (dense),
+    apportioned over the ``batch`` slots that ran. This is what replay
+    charges — live context bounds it from below.
+    """
+    batch: int
+    mean_context: int
+    contexts: Tuple[int, ...]             # live context per slot that ran
+    streamed: Tuple[int, ...] = ()        # fetched KV tokens per ran slot
+
+
 @dataclass
 class PrefillTask:
     """Resumable prefill state for one prompt batch (paper §3.5).
@@ -112,15 +170,19 @@ class PrefillTask:
     The prefill engine persists activations and per-group cache entries
     here between layer-group launches, so the main loop can run decode
     iterations — and admit newly-arrived work — *between* groups instead
-    of holding the device for the whole prompt."""
+    of holding the device for the whole prompt. In paged mode KV is
+    scattered into pooled pages as each group finishes (``page_map``
+    routes prompt blocks to physical pages) and ``tmp_cache``/``entries``
+    stay empty."""
     batch: List[Request]
     x: jax.Array                          # activations after `rep` groups
     positions: jax.Array
     lengths: jax.Array
-    tmp_cache: dict
+    tmp_cache: Optional[dict]
     n_tokens: int = 0                     # total prompt tokens in the batch
     entries: List[tuple] = field(default_factory=list)
     rep: int = 0                          # next pattern-repeat group to run
+    page_map: Optional[np.ndarray] = None  # (B, blocks) physical pages
 
 
 class BulletServer:
@@ -131,7 +193,8 @@ class BulletServer:
                  max_slots: int = 8, max_len: int = 128,
                  max_prefill_batch: int = 4,
                  sched: SchedulerConfig = SchedulerConfig(),
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, paged: Optional[bool] = None,
+                 page_size: int = 16):
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -147,9 +210,30 @@ class BulletServer:
         self.max_len = max_len
         self.max_prefill_batch = max_prefill_batch
         self.stats = EngineStats()
-        # unified device cache pool: one decode slot per request
-        self.cache = T.init_cache(cfg, max_slots, max_len, dtype)
-        self.pool = PagedKVPool(max_slots * max_len, block_size=16)
+        self.pool = PagedKVPool(max_slots * max_len, block_size=page_size)
+        if paged is None:
+            paged = T.supports_paged_cache(cfg)
+        elif paged and not T.supports_paged_cache(cfg):
+            raise ValueError(f"{cfg.name}: pattern {cfg.pattern} cannot use "
+                             "the block-paged cache (needs pure ATTN)")
+        self.paged = paged
+        self.page_size = page_size
+        if paged:
+            # unified device page pool: PagedKVPool block ids address these
+            # pages directly; the trailing trash page absorbs masked writes
+            self.cache = T.init_paged_cache(cfg, self.pool.n_blocks,
+                                            page_size, dtype)
+            self.max_blocks = self.pool.blocks_for(max_len)
+            self._trash_page = self.pool.n_blocks
+            self._host_tables = np.full((max_slots, self.max_blocks),
+                                        self._trash_page, np.int32)
+            self._tables_dirty = False
+            #: device copies of the (sliced) host table, keyed by bucket
+            #: width — re-uploaded only when ownership changes
+            self._dev_tables: Dict[int, jax.Array] = {}
+        else:
+            # dense fallback: one fixed max_len decode row per slot
+            self.cache = T.init_cache(cfg, max_slots, max_len, dtype)
         # slot bookkeeping
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.tokens = jnp.zeros((max_slots, 1), jnp.int32)
@@ -167,7 +251,43 @@ class BulletServer:
         #: what the most recent step() actually executed — consumed by
         #: virtual-clock replay to charge exactly the work that ran
         self.last_prefill_tokens: int = 0
-        self.last_decode: Optional[Tuple[int, int]] = None   # (batch, ctx)
+        self.last_decode: Optional[DecodeWork] = None
+
+    # -- device block tables (paged mode) -------------------------------
+    def _sync_tables(self) -> None:
+        """Re-export the pool's block tables in slot order. Ownership moves
+        (migrate / preempt / finish) are table edits only — the pages
+        themselves never move on device. Only DECODE-phase slots are
+        mapped: a slot mid-prefill must stay on the trash page, or the
+        decode iteration's unconditional per-slot KV write (driven by the
+        slot's stale pos/tokens) would poison the pages its new occupant
+        is concurrently scattering prompt KV into."""
+        self._host_tables = self.pool.device_block_table(
+            [r.rid if r is not None and r.phase == Phase.DECODE else None
+             for r in self.slot_req],
+            self.max_blocks, fill=self._trash_page)
+        self._dev_tables.clear()
+        self._tables_dirty = False
+
+    def _device_tables(self, n_b: int) -> jax.Array:
+        """The first ``n_b`` table columns on device, uploaded lazily and
+        reused across iterations until ownership changes."""
+        bt = self._dev_tables.get(n_b)
+        if bt is None:
+            bt = jnp.asarray(self._host_tables[:, :n_b])
+            self._dev_tables[n_b] = bt
+        return bt
+
+    def _decode_block_bucket(self, ctxs_ran: Tuple[int, ...]) -> int:
+        """Max live page count across the slots that run, rounded up to a
+        power of two: the paged kernel's grid depth. Bucketing bounds
+        decode recompiles to O(log max_blocks) executables while the
+        streamed pages still track live context."""
+        need = -(-max(ctxs_ran) // self.page_size) if ctxs_ran else 1
+        b = 1
+        while b < need:
+            b <<= 1
+        return max(1, min(b, self.max_blocks))
 
     # -- request ingress ------------------------------------------------
     def submit(self, req: Request, prompt_tokens: np.ndarray):
@@ -239,6 +359,8 @@ class BulletServer:
         victim = max(victims, key=lambda r: r.arrival)
         slot = victim._slot                                 # type: ignore
         self.pool.preempt(victim.rid)
+        if self.paged:
+            self._tables_dirty = True    # ownership moved back to the pool
         self.active = self.active.at[slot].set(False)
         self.slot_req[slot] = None
         victim.phase = Phase.QUEUED
@@ -309,11 +431,23 @@ class BulletServer:
         lengths = jnp.asarray(lens)
         x = _embed_prompt(self.params, jnp.asarray(toks), cfg=self.cfg)
         positions = jnp.arange(plen)[None, :]
-        # temporary per-batch cache (migrated slot-wise at handoff)
-        tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
-                                 jax.tree.leaves(self.cache)[0].dtype)
+        tmp_cache = page_map = None
+        if self.paged:
+            # route each request's prompt blocks to its pooled pages so
+            # layer groups scatter KV in place (no handoff copy)
+            self._tables_dirty = True
+            ps = self.page_size
+            page_map = np.full((len(batch), -(-plen // ps)),
+                               self._trash_page, np.int32)
+            for i, r in enumerate(batch):
+                blocks = self.pool.table(r.rid).blocks[:-(-lens[i] // ps)]
+                page_map[i, :len(blocks)] = blocks
+        else:
+            # temporary per-batch cache (migrated slot-wise at handoff)
+            tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
+                                     jax.tree.leaves(self.cache)[0].dtype)
         self.ptask = PrefillTask(batch, x, positions, lengths, tmp_cache,
-                                 n_tokens=int(sum(lens)))
+                                 n_tokens=int(sum(lens)), page_map=page_map)
         P = self.buffer.state.prefill
         P.active_rid = batch[0].rid
         P.started_at = now
@@ -338,12 +472,22 @@ class BulletServer:
         rep = task.rep
         p_slice = jax.tree.map(lambda a: a[rep], self.params["blocks"],
                                is_leaf=lambda a: hasattr(a, "shape"))
-        c_slice = jax.tree.map(lambda a: a[rep], task.tmp_cache["blocks"],
-                               is_leaf=lambda a: hasattr(a, "shape"))
-        task.x, new_entries = _prefill_group(
-            p_slice, task.x, task.positions, c_slice, task.lengths,
-            cfg=self.cfg, repeat=rep)
-        task.entries.append(new_entries)
+        if self.paged:
+            task.x, kv_entries = _prefill_group_paged(
+                p_slice, task.x, task.positions, cfg=self.cfg)
+            pm = jnp.asarray(task.page_map)
+            rep_ix = jnp.int32(rep)
+            for j, (k_e, v_e) in enumerate(kv_entries):
+                leaf = self.cache["blocks"][j]
+                leaf["k"] = _scatter_group_pages(leaf["k"], k_e, pm, rep_ix)
+                leaf["v"] = _scatter_group_pages(leaf["v"], v_e, pm, rep_ix)
+        else:
+            c_slice = jax.tree.map(lambda a: a[rep], task.tmp_cache["blocks"],
+                                   is_leaf=lambda a: hasattr(a, "shape"))
+            task.x, new_entries = _prefill_group(
+                p_slice, task.x, task.positions, c_slice, task.lengths,
+                cfg=self.cfg, repeat=rep)
+            task.entries.append(new_entries)
         task.rep += 1
         self.stats.prefill_cycles += 1
         self.last_prefill_tokens = task.n_tokens
@@ -357,20 +501,27 @@ class BulletServer:
         return True
 
     def _finish_prefill(self, task: PrefillTask, now: float) -> None:
-        """Migrate the finished batch to decode: write cache rows into
-        slots (page-table/slot-index handoff only) and emit first tokens."""
+        """Migrate the finished batch to decode. Paged mode: the KV already
+        sits in pooled pages, so the handoff is pure block-table ownership
+        (pool.migrate) — no device copy. Dense fallback: copy each
+        request's ``max_len`` cache row into its decode slot."""
         first_tokens = np.asarray(
             _final_logits(self.params, task.x, task.lengths, cfg=self.cfg))
         P = self.buffer.state.prefill
+        if self.paged:
+            # migrated slots flip PREFILL->DECODE: re-map their pages into
+            # the device tables before the next decode iteration
+            self._tables_dirty = True
         for i, r in enumerate(task.batch):
             slot = r._slot                                  # type: ignore
-            for j in range(len(self.cfg.pattern)):
-                for key in self.cache["blocks"][j]:
-                    stacked = jnp.stack(
-                        [task.entries[rep][j][key][i]
-                         for rep in range(len(task.entries))])
-                    self.cache["blocks"][j][key] = _write_slot(
-                        self.cache["blocks"][j][key], stacked, slot)
+            if not self.paged:
+                for j in range(len(self.cfg.pattern)):
+                    for key in self.cache["blocks"][j]:
+                        stacked = jnp.stack(
+                            [task.entries[rep][j][key][i]
+                             for rep in range(len(task.entries))])
+                        self.cache["blocks"][j][key] = _write_slot(
+                            self.cache["blocks"][j][key], stacked, slot)
             tok = int(first_tokens[i])
             prefix = self.outputs.get(r.rid)
             if prefix is None:
@@ -403,6 +554,8 @@ class BulletServer:
         r.finish_time = now
         self.finished.append(r)
         self.pool.free(r.rid)
+        if self.paged:
+            self._tables_dirty = True
         self.slot_req[slot] = None
         self.active = self.active.at[slot].set(False)
         self._drop_request_meta(r.rid)
@@ -431,12 +584,29 @@ class BulletServer:
         self.buffer.state.decode.paused = False
         self._switch(decision.resources)
 
-        n_ran = int(np.asarray(self.active).sum())
-        next_tokens, self.cache = _decode_iteration(
-            self.params, self.cache, self.tokens, self.pos, self.active,
-            cfg=self.cfg)
+        act_np = np.asarray(self.active)
+        pos_np = np.asarray(self.pos)
+        # live context per slot that runs this iteration — the bytes the
+        # cache stream actually touches (paged) / the estimator charges
+        ctxs_ran = tuple(int(p) + 1 for p, a in zip(pos_np, act_np) if a)
+        n_ran = len(ctxs_ran)
+        if self.paged:
+            if self._tables_dirty:
+                self._sync_tables()
+            n_b = self._decode_block_bucket(ctxs_ran)
+            streamed = (n_b * self.page_size * self.max_slots
+                        // max(n_ran, 1),) * n_ran
+            next_tokens, self.cache = _decode_iteration(
+                self.params, self.cache, self.tokens, self.pos, self.active,
+                self._device_tables(n_b), cfg=self.cfg)
+        else:
+            streamed = (self.max_len * self.max_slots
+                        // max(n_ran, 1),) * n_ran
+            next_tokens, self.cache = _decode_iteration(
+                self.params, self.cache, self.tokens, self.pos, self.active,
+                cfg=self.cfg)
         self.tokens = next_tokens
-        self.pos = self.pos + np.asarray(self.active).astype(np.int32)
+        self.pos = self.pos + act_np.astype(np.int32)
         self.stats.decode_iterations += 1
         nt = np.asarray(next_tokens)[:, 0]
 
@@ -459,9 +629,11 @@ class BulletServer:
         live = [x for x in self.slot_req
                 if x is not None and x.phase == Phase.DECODE]
         D.batch = [x.rid for x in live]
-        D.mean_context = (int(sum(x.prompt_len + x.generated for x in live)
-                              / len(live)) if live else 0)
-        self.last_decode = (n_ran, max(D.mean_context, 1))
+        D.ctx_tokens = int(sum(x.prompt_len + x.generated for x in live))
+        D.mean_context = int(D.ctx_tokens / len(live)) if live else 0
+        self.last_decode = DecodeWork(
+            n_ran, max(int(sum(ctxs_ran) / max(n_ran, 1)), 1), ctxs_ran,
+            streamed)
         return True
 
     # -- main loop --------------------------------------------------------

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -159,8 +159,17 @@ class PerfEstimator:
 
     def decode_iter_time(self, cfg: ModelConfig, batch: int, ctx: int,
                          units: int, *, colocated: bool = False,
-                         oversub: float = 1.0) -> float:
-        c = A.decode_cost(cfg, batch, ctx)
+                         oversub: float = 1.0,
+                         contexts: Optional[Sequence[int]] = None,
+                         page_size: Optional[int] = None) -> float:
+        """One continuous-batching decode iteration. ``contexts`` charges
+        summed per-slot live-context bytes (what the block-paged cache
+        actually streams) instead of the ``batch × mean`` collapse;
+        ``page_size`` adds the page-granularity round-up."""
+        c = A.decode_cost(cfg, batch, ctx, contexts=contexts,
+                          page_size=page_size)
+        if contexts is not None:
+            batch = len(contexts)
         t = self.kernel_time(c.flops, c.hbm_bytes, units,
                              colocated=colocated, oversub=oversub,
                              grid=max(1, batch * max(cfg.n_kv_heads, 1)))

@@ -33,11 +33,23 @@ class DecodeStatus:
     out_tokens: Dict[int, int] = field(default_factory=dict)     # o_i
     decode_time: Dict[int, float] = field(default_factory=dict)  # d_i
     mean_context: int = 0
+    #: summed live context across the batch — the KV tokens a paged decode
+    #: iteration actually streams (mean_context truncates; the scheduler's
+    #: bandwidth charge uses this when available)
+    ctx_tokens: int = 0
     paused: bool = False
 
     @property
     def n_d(self) -> int:
         return len(self.batch)
+
+    @property
+    def context(self) -> float:
+        """Best available mean context: exact (ctx_tokens/n_d) when the
+        engine reports summed live context, else the stored mean."""
+        if self.ctx_tokens and self.batch:
+            return self.ctx_tokens / len(self.batch)
+        return float(self.mean_context)
 
     def tpot(self, rid: int) -> float:
         o = self.out_tokens.get(rid, 0)

@@ -103,7 +103,7 @@ class SLOScheduler:
             return 0.0
         colocated = state.prefill.active_rid is not None
         return 1e3 * self.est.decode_iter_time(
-            self.cfg, D.n_d, max(D.mean_context, 1), max(units, 1),
+            self.cfg, D.n_d, max(D.context, 1), max(units, 1),
             colocated=colocated)
 
     # -- search moves (Algorithm 1 lines 11-18 + Algorithm 2) ----------
@@ -185,7 +185,7 @@ class SLOScheduler:
         t_p = self.est.prefill_time(self.cfg, max(P.n_tokens, 1), total,
                                     colocated=True)
         t_d = self.est.decode_iter_time(self.cfg, max(D.n_d, 1),
-                                        max(D.mean_context, 1), total,
+                                        max(D.context, 1), total,
                                         colocated=True)
         frac = t_p / max(t_p + t_d, 1e-9)
         u = self._quantize(int(total * frac))

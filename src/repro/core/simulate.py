@@ -153,8 +153,9 @@ class ServingSimulator:
             P.started_at = active[0].prefill_start if active else now
             P.n_waiting = len(pending)
             D.batch = [r.rid for r in decoding]
-            D.mean_context = (int(sum(r.prompt_len + r.generated
-                                      for r in decoding) / len(decoding))
+            D.ctx_tokens = int(sum(r.prompt_len + r.generated
+                                   for r in decoding))
+            D.mean_context = (int(D.ctx_tokens / len(decoding))
                               if decoding else 0)
             for r in decoding:
                 D.out_tokens[r.rid] = r.generated
@@ -233,6 +234,10 @@ class ServingSimulator:
                 v = state.resources.decode_units if partition else U
                 osub = 2.0 if (not partition and colocated) else 1.0
                 if v > 0:
+                    # pred and truth must use the same batch×mean formula:
+                    # the surrogate machine is mean-based, so passing exact
+                    # per-slot contexts here would bake a formula mismatch
+                    # into the pred/actual pairs (estimator-accuracy figs)
                     ctx = max(1, int(sum(r.prompt_len + r.generated
                                          for r in decoding) / len(decoding)))
                     dur = self.truth.measure_decode(

@@ -10,6 +10,7 @@ if not hasattr(_pltpu, "CompilerParams"):       # jax < 0.5 naming
 from repro.kernels.ops import (
     flash_attention_op,
     decode_attention_op,
+    paged_decode_attention_op,
     bullet_attention_op,
     rglru_scan_op,
     ssd_scan_op,

@@ -66,8 +66,16 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *,
     b, kh, g, d = q.shape
     s = k_cache.shape[1]
     bs = min(block_s, s)
-    assert s % bs == 0, (s, bs)
-    n_s = s // bs
+    n_s = -(-s // bs)
+    pad = n_s * bs - s
+    if pad:
+        # tail block: pad the cache and mark the padded slots empty
+        # (kv_position −1 masks them) so any cache length works
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, padw)
+        v_cache = jnp.pad(v_cache, padw)
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
 
     kernel = functools.partial(_decode_kernel, bs=bs, n_s=n_s,
                                scale=d ** -0.5)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import bullet_attention as _bullet
 from repro.kernels import decode_attention as _decode
 from repro.kernels import flash_attention as _flash
+from repro.kernels import paged_decode_attention as _paged
 from repro.kernels import rglru_scan as _rglru
 from repro.kernels import ssd_scan as _ssd
 
@@ -64,6 +65,22 @@ def decode_attention_op(q, k_cache, v_cache, kv_positions, pos, *,
     bs = _pick_block(k_cache.shape[1], 512)
     o = _decode.decode_attention(qr, k_cache, v_cache, kv_positions, pos,
                                  block_s=bs, interpret=interpret)
+    return o.reshape(b, 1, h, d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_op(q, k_pages, v_pages, block_tables, pos, *,
+                              interpret=None):
+    """Model layout: q (B,1,H,D), pages (P,ps,K,D), block_tables (B,n_b)
+    int32 physical pages, pos (B,). Returns (B,1,H,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, _, h, d = q.shape
+    kh = k_pages.shape[2]
+    g = h // kh
+    qr = q[:, 0].reshape(b, kh, g, d)
+    o = _paged.paged_decode_attention(qr, k_pages, v_pages, block_tables,
+                                      pos, interpret=interpret)
     return o.reshape(b, 1, h, d)
 
 

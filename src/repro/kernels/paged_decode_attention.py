@@ -1,0 +1,113 @@
+"""Block-paged single-token GQA decode attention Pallas TPU kernel.
+
+The KV cache lives in a shared page pool ``(n_pages + 1, page_size, K, D)``
+(the last page is a write-off "trash" page); each batch slot owns an
+ordered list of pages recorded in a device block table
+``(B, pages_per_seq)``. The kernel streams HBM->VMEM **one live page per
+grid step** — the block table is a scalar-prefetch operand, so the page
+index feeds the DMA descriptor directly (``PrefetchScalarGridSpec``) and
+only pages the table names are ever fetched. Decode HBM traffic therefore
+scales with live context (``sum_i ceil(ctx_i/ps)·ps``), not with the dense
+``B × max_len`` capacity the slot-cache kernel streams.
+
+``pages_per_seq`` is the *bucketed* max live page count across the batch:
+callers round it up (powers of two) so the grid — and hence the compiled
+executable — changes only O(log max_pages) times over a request's life.
+
+Masking is positional: page ``i`` covers absolute positions
+``[i·ps, (i+1)·ps)`` and a slot attends positions ``<= pos``; slots with
+``pos < 0`` (inactive) attend nothing and produce zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, q_ref, pos_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, ps: int, n_b: int,
+                         scale: float):
+    del bt_ref                       # consumed by the index maps
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (ps, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (G, ps)
+    kvpos = i * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    pos = pos_ref[0, 0]
+    valid = kvpos <= pos                                   # (1, ps)
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(valid, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == n_b - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           interpret: bool = False):
+    """q: (B, K, G, D); pages: (P, ps, K, D); block_tables: (B, n_b) int32
+    physical page per (slot, block) — entries past a slot's live context
+    must point at a valid (e.g. trash) page; pos: (B,) int32 absolute
+    position of the current token (−1 = inactive slot). Returns
+    (B, K, G, D)."""
+    b, kh, g, d = q.shape
+    ps = k_pages.shape[1]
+    n_b = block_tables.shape[1]
+
+    kernel = functools.partial(_paged_decode_kernel, ps=ps, n_b=n_b,
+                               scale=d ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, n_b),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, i, bt: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h, i, bt: (b_, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, ps, 1, d), lambda b_, h, i, bt: (bt[b_, i],
+                                                              0, h, 0)),
+            pl.BlockSpec((1, ps, 1, d), lambda b_, h, i, bt: (bt[b_, i],
+                                                              0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, i, bt: (b_, h,
+                                                                   0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, q, pos.reshape(b, 1), k_pages, v_pages)

@@ -44,6 +44,18 @@ def decode_attention_ref(q, k_cache, v_cache, kv_positions, pos):
                       v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, pos):
+    """q: (B, K, G, D); pages: (P, ps, K, D); block_tables: (B, n_b);
+    pos: (B,). Gathers each slot's pages into a contiguous cache and runs
+    the dense oracle — positions are contiguous from 0 by construction."""
+    b, n_b = block_tables.shape
+    ps = k_pages.shape[1]
+    kc = k_pages[block_tables].reshape(b, n_b * ps, *k_pages.shape[2:])
+    vc = v_pages[block_tables].reshape(b, n_b * ps, *v_pages.shape[2:])
+    kvpos = jnp.broadcast_to(jnp.arange(n_b * ps)[None], (b, n_b * ps))
+    return decode_attention_ref(q, kc, vc, kvpos, pos)
+
+
 def bullet_attention_ref(qp, kp, vp, qd, kd, vd, kv_positions, pos, *,
                          causal=True, window=0):
     """Fused hybrid batch = prefill flash + decode; the oracle just runs the

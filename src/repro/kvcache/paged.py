@@ -3,9 +3,12 @@
 Host-side block allocator shared by the prefill and decode engines: the
 prefill engine allocates blocks and fills them; migration to decode passes
 *block indices only* (copy-free, the cudaIpc-shared-pool analogue). The
-device-side cache is a dense per-slot region managed by the engine; this
-allocator provides admission control and the page-table bookkeeping a TPU
-paged-attention kernel would consume.
+block ids index the engine's *device* page pools directly — prefill
+scatters KV into pooled pages, the paged decode kernel gathers them via
+the :meth:`PagedKVPool.device_block_table` export, and preempt/resume/
+migrate move block ownership in this table instead of copying or
+re-laying-out device rows. (Engines may also run a dense per-slot cache,
+in which case this allocator is admission bookkeeping only.)
 
 Invariants (property-tested in tests/test_kvcache.py):
   - a block is owned by at most one request;
@@ -17,7 +20,9 @@ Invariants (property-tested in tests/test_kvcache.py):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 
 class OutOfBlocks(RuntimeError):
@@ -110,6 +115,27 @@ class PagedKVPool:
 
     def table(self, rid: int) -> Optional[PageTable]:
         return self._tables.get(rid)
+
+    def device_block_table(self, slot_rids: Sequence[Optional[int]],
+                           max_blocks: int,
+                           fill: Optional[int] = None) -> np.ndarray:
+        """Device-syncable block table: ``(n_slots, max_blocks)`` int32 of
+        physical page ids, row ``s`` holding the pages of the request in
+        slot ``s`` (first ``ceil(n_tokens / block_size)`` entries, capped
+        at ``max_blocks``). Empty slots and unused entries are ``fill``
+        (default: ``n_blocks``, i.e. one-past-the-pool — engines keep a
+        trash page there so every entry is a valid gather/scatter target).
+        """
+        if fill is None:
+            fill = self.n_blocks
+        tbl = np.full((len(slot_rids), max_blocks), fill, np.int32)
+        for s, rid in enumerate(slot_rids):
+            t = self._tables.get(rid) if rid is not None else None
+            if t is None:
+                continue
+            blocks = t.blocks[:max_blocks]
+            tbl[s, :len(blocks)] = blocks
+        return tbl
 
     def check_invariants(self) -> None:
         owned = [b for t in self._tables.values() for b in t.blocks]

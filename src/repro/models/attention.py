@@ -64,6 +64,62 @@ def attention_decode(q, k_cache, v_cache, kv_positions, pos):
     return decode_attention(q, k_cache, v_cache, kv_positions, pos)
 
 
+def attention_decode_paged(q, k_pages, v_pages, block_tables, pos):
+    """Backend-dispatching decode attention over a block-paged cache.
+
+    q: (B, 1, H, D); pages: (P, ps, K, D) shared physical page pool;
+    block_tables: (B, n_b) int32 physical page per (slot, block) — every
+    entry must be a valid page index (unused entries point at a trash
+    page); pos: (B,) absolute position of the current token. Streams only
+    the pages the tables name, so HBM traffic scales with live context.
+    """
+    if use_pallas_kernels():
+        from repro.kernels import paged_decode_attention_op
+        return paged_decode_attention_op(q, k_pages, v_pages, block_tables,
+                                         pos)
+    return paged_decode_ref(q, k_pages, v_pages, block_tables, pos)
+
+
+def gather_pages(pages, block_tables):
+    """Materialize each slot's paged KV as a contiguous per-slot cache:
+    pages (P, ps, K, D) + tables (B, n_b) -> (B, n_b·ps, K, D). Positions
+    are contiguous from 0 by construction of the paged layout."""
+    b, n_b = block_tables.shape
+    ps = pages.shape[1]
+    return pages[block_tables].reshape(b, n_b * ps, *pages.shape[2:])
+
+
+def paged_decode_ref(q, k_pages, v_pages, block_tables, pos):
+    """XLA fallback + numerics reference for the paged kernel: gather each
+    slot's pages into a contiguous per-slot cache and run the dense path."""
+    b, n_b = block_tables.shape
+    ps = k_pages.shape[1]
+    kc = gather_pages(k_pages, block_tables)
+    vc = gather_pages(v_pages, block_tables)
+    kvpos = jnp.broadcast_to(jnp.arange(n_b * ps)[None], (b, n_b * ps))
+    return decode_attention(q, kc, vc, kvpos, pos)
+
+
+def write_paged_kv(k_pages, v_pages, k_new, v_new, block_tables, pos):
+    """Write one new token's K/V into the page pool.
+
+    k_new/v_new: (B, 1, K, D); the token at absolute position ``pos[b]``
+    lands in page ``block_tables[b, pos[b] // ps]`` at offset
+    ``pos[b] % ps``. The block index is clamped to the table width so
+    slots with stale ``pos`` (inactive) write into whatever page their
+    table names there — engines point unused table entries at a trash
+    page, making those writes harmless.
+    """
+    ps = k_pages.shape[1]
+    n_b = block_tables.shape[1]
+    bi = jnp.clip(pos // ps, 0, n_b - 1)
+    phys = jnp.take_along_axis(block_tables, bi[:, None], axis=1)[:, 0]
+    off = jnp.clip(pos % ps, 0, ps - 1)
+    k_pages = k_pages.at[phys, off].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v_new[:, 0].astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
 def _gqa_logits(q, k):
     """q: (B,Sq,H,D), k: (B,Sk,K,D) -> (B, K, H/K, Sq, Sk) fp32 logits."""
     b, sq, h, d = q.shape

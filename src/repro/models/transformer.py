@@ -348,6 +348,38 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Block-paged caches cover homogeneous full-attention stacks: every
+    position is a GQA KV entry addressed by absolute position. Ring caches
+    (SWA / long-context carve-out), recurrent states, and cross-attention
+    keep the dense per-slot layout."""
+    return (all(blk.mixer == ATTN for blk in cfg.pattern)
+            and not cfg.pattern_tail and not cfg.cross_attention)
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16, *, abstract: bool = False):
+    """Block-paged decode cache: per pattern position a shared physical
+    page pool ``(R, n_pages + 1, page_size, K, D)`` — one page pool per
+    layer, all indexed by the same logical block ids (the engine's
+    ``PagedKVPool`` allocates token ranges once; every layer stores its KV
+    for that range in its own pool at the same page index). The extra last
+    page (index ``n_pages``) is the trash page: unused block-table entries
+    point at it, so masked gathers and inactive-slot writes stay in
+    bounds."""
+    assert supports_paged_cache(cfg), cfg.pattern
+    r = cfg.n_pattern_repeats
+    k, dh = cfg.n_kv_heads, cfg.head_dim
+    shape = (r, n_pages + 1, page_size, k, dh)
+
+    def mk():
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    return {"blocks": tuple({"k": mk(), "v": mk()} for _ in cfg.pattern)}
+
+
 def cache_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Dict[str, Any]:
     b = policy.data_axes if policy.shard_batch else None
     m = policy.model_axis
@@ -566,9 +598,24 @@ def _kv_positions(pos, s_cache, window_like: bool):
 
 
 def _apply_block_decode(x, p, blk, cfg, policy, cache_entry, pos, cross_kv, *,
-                        long_context: bool = False):
-    """Single-token block application. x: (B,1,D). Returns (x, new_entry)."""
+                        long_context: bool = False, block_tables=None):
+    """Single-token block application. x: (B,1,D). Returns (x, new_entry).
+
+    With ``block_tables`` (B, n_b) the cache entry is a block-paged pool
+    (P+1, ps, K, D): the new token's K/V is scattered into its slot's
+    current page and attention gathers only the pages the table names.
+    """
     h = L.rms_norm(x, p["ln1"], cfg.rmsnorm_eps)
+    if block_tables is not None and blk.mixer == ATTN:
+        q, k_new, v_new = _project_qkv(h, p, cfg, pos[:, None], policy)
+        kp, vp = attn_ops.write_paged_kv(
+            cache_entry["k"], cache_entry["v"], k_new, v_new,
+            block_tables, pos)
+        o = attn_ops.attention_decode_paged(q, kp, vp, block_tables, pos)
+        y = o.reshape(*o.shape[:2], -1) @ p["wo"]
+        x = x + y
+        y, _ = _ff(x, p, blk, cfg, policy)
+        return x + y, {"k": kp, "v": vp}
     if blk.mixer in (ATTN, SWA):
         q, k_new, v_new = _project_qkv(h, p, cfg, pos[:, None], policy)
         kc, vc = cache_entry["k"], cache_entry["v"]
@@ -797,11 +844,14 @@ def prefill(params, tokens, lengths, cache, cfg: ModelConfig, policy=None, *,
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, policy=None, *,
-                long_context: bool = False):
+                long_context: bool = False, block_tables=None):
     """One decode iteration.
 
     tokens: (B, 1) int32; pos: (B,) absolute position of the new token.
-    Returns (logits (B, V), new_cache).
+    ``block_tables`` (B, n_b) switches attention blocks to the block-paged
+    cache layout of :func:`init_paged_cache` (shared across layers — every
+    layer's pool is indexed by the same table). Returns
+    (logits (B, V), new_cache).
     """
     x = embed_tokens(params, tokens, cfg, policy)
 
@@ -818,7 +868,8 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, policy=None, *,
                 cross = (cross_c["k"], cross_c["v"])
             x, entry = _apply_block_decode(x, p_slices[j], blk, cfg, policy,
                                            c_slices[j], pos, cross,
-                                           long_context=long_context)
+                                           long_context=long_context,
+                                           block_tables=block_tables)
             new_entries.append(entry)
         ys = tuple(new_entries)
         if cfg.cross_attention:

@@ -82,9 +82,14 @@ def estimator_cycle_cost(server: BulletServer) -> float:
             cfg, server.last_prefill_tokens, 0, max(R.prefill_units, 1),
             colocated=server.last_decode is not None) * len(cfg.pattern))
     if server.last_decode is not None:
-        n_d, ctx = server.last_decode
+        w = server.last_decode
+        # charge the KV bytes the iteration actually streamed, recorded by
+        # the engine per slot: bucketed live pages (paged) or the full
+        # max_len row (dense fallback) — not a batch × mean collapse
         dt = max(dt, est.decode_iter_time(
-            cfg, max(n_d, 1), max(ctx, 1), max(R.decode_units, 1),
+            cfg, max(w.batch, 1), max(w.mean_context, 1),
+            max(R.decode_units, 1),
+            contexts=w.streamed or None,
             colocated=server.last_prefill_tokens > 0))
     return dt if dt > 0 else 1e-4
 

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import (bullet_attention_op, decode_attention_op,
-                           flash_attention_op, rglru_scan_op, ssd_scan_op)
+                           flash_attention_op, paged_decode_attention_op,
+                           rglru_scan_op, ssd_scan_op)
 from repro.kernels import ref as R
 from repro.kernels.bullet_attention import build_schedule
 from repro.models.ssm import ssd_chunked
@@ -101,6 +102,105 @@ def test_decode_attention_ring_positions():
                                  kvpos, pos)
     np.testing.assert_allclose(np.asarray(out[:, 0].reshape(b, kh, g, d)),
                                np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_tail_block():
+    """Cache lengths that are not a multiple of the kv block: the kernel
+    pads the tail block and masks the padded slots instead of crashing."""
+    from repro.kernels.decode_attention import decode_attention
+    b, kh, g, s, d = 2, 2, 2, 72, 32
+    h = kh * g
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (b, 1, h, d))
+    kc = rand(ks[1], (b, s, kh, d))
+    vc = rand(ks[2], (b, s, kh, d))
+    kvpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos = jnp.array([50, 71])
+    out = decode_attention(q[:, 0].reshape(b, kh, g, d), kc, vc, kvpos, pos,
+                           block_s=32, interpret=True)   # 72 = 2*32 + 8 tail
+    ref = R.decode_attention_ref(q[:, 0].reshape(b, kh, g, d), kc, vc,
+                                 kvpos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (block-table gather over the shared page pool)
+# ---------------------------------------------------------------------------
+
+def _mk_paged(key, b, kh, d, n_pages, ps, n_b, seed_tables=0):
+    ks = jax.random.split(key, 3)
+    kp = rand(ks[0], (n_pages + 1, ps, kh, d))
+    vp = rand(ks[1], (n_pages + 1, ps, kh, d))
+    rng = np.random.default_rng(seed_tables)
+    # each slot owns a disjoint shuffled set of physical pages
+    perm = rng.permutation(n_pages)[:b * n_b].reshape(b, n_b)
+    return kp, vp, jnp.asarray(perm, jnp.int32)
+
+
+@pytest.mark.parametrize("b,kh,g,n_b,ps,d", [
+    (2, 2, 4, 4, 16, 32), (1, 4, 1, 2, 32, 64), (3, 1, 8, 3, 16, 16),
+])
+def test_paged_decode_matches_dense(b, kh, g, n_b, ps, d):
+    """Acceptance: paged decode == dense decode numerics (fp32, ≤1e-5)
+    when the dense cache holds the gathered page contents."""
+    h = kh * g
+    n_pages = b * n_b + 2
+    q = rand(jax.random.fold_in(KEY, 1), (b, 1, h, d))
+    kp, vp, bt = _mk_paged(jax.random.fold_in(KEY, 2), b, kh, d,
+                           n_pages, ps, n_b)
+    pos = jnp.asarray(
+        np.random.default_rng(1).integers(1, n_b * ps, b), jnp.int32)
+    out = paged_decode_attention_op(q, kp, vp, bt, pos, interpret=True)
+    # dense reference: gather each slot's pages into a contiguous cache
+    kc = kp[bt].reshape(b, n_b * ps, kh, d)
+    vc = vp[bt].reshape(b, n_b * ps, kh, d)
+    kvpos = jnp.broadcast_to(jnp.arange(n_b * ps)[None], (b, n_b * ps))
+    ref = decode_attention_op(q, kc, vc, kvpos, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5,
+                               rtol=1e-5)
+    ref2 = R.paged_decode_attention_ref(q[:, 0].reshape(b, kh, g, d),
+                                        kp, vp, bt, pos)
+    np.testing.assert_allclose(
+        np.asarray(out[:, 0].reshape(b, kh, g, d)), np.asarray(ref2),
+        atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_trash_page_isolation():
+    """Entries past a slot's live context point at the trash page; its
+    contents must never leak into the output (positional masking)."""
+    b, kh, g, ps, n_b = 2, 2, 2, 16, 3
+    h, d = kh * g, 32
+    n_pages = b * n_b
+    q = rand(jax.random.fold_in(KEY, 3), (b, 1, h, d))
+    kp, vp, bt = _mk_paged(jax.random.fold_in(KEY, 4), b, kh, d,
+                           n_pages, ps, n_b)
+    pos = jnp.array([ps - 1, 2 * ps - 5])   # live: 1 page / 2 pages
+    base = paged_decode_attention_op(q, kp, vp, bt, pos, interpret=True)
+    # rewrite the dead table entries to the (poisoned) trash page
+    kp = kp.at[n_pages].set(1e4)
+    vp = vp.at[n_pages].set(-1e4)
+    bt_np = np.asarray(bt).copy()
+    bt_np[0, 1:] = n_pages
+    bt_np[1, 2:] = n_pages
+    out = paged_decode_attention_op(q, kp, vp, jnp.asarray(bt_np), pos,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base), atol=1e-6)
+
+
+def test_paged_decode_xla_fallback_matches_kernel():
+    """models.attention.paged_decode_ref (the engine's off-TPU path) and
+    the Pallas kernel implement the same contract."""
+    from repro.models.attention import paged_decode_ref
+    b, kh, g, ps, n_b = 2, 2, 2, 16, 2
+    h, d = kh * g, 32
+    q = rand(jax.random.fold_in(KEY, 5), (b, 1, h, d))
+    kp, vp, bt = _mk_paged(jax.random.fold_in(KEY, 6), b, kh, d,
+                           b * n_b, ps, n_b)
+    pos = jnp.array([7, 30])
+    out_k = paged_decode_attention_op(q, kp, vp, bt, pos, interpret=True)
+    out_x = paged_decode_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_x),
+                               atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
