@@ -2,7 +2,7 @@
 16k-token sequence (no hybrid batching) — KV reloads slow successive chunks
 and shrink effective utilization; larger chunks trade TPOT for it."""
 
-from benchmarks.common import HW, MODEL, truth
+from benchmarks.common import HW, MODEL
 from repro.core import analytics as A
 from repro.core.estimator import PerfEstimator
 from repro.core.profiler import TRUE_PARAMS

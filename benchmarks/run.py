@@ -23,6 +23,7 @@ BENCHES = [
     ("table3_overheads", "benchmarks.overheads"),
     ("kernels", "benchmarks.kernel_bench"),
     ("paged_decode", "benchmarks.paged_decode_attention"),
+    ("fused_vs_serial", "benchmarks.fused_vs_serial"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 

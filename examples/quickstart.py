@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engine import BulletServer
-from repro.models import init_params, param_count
+from repro.models import init_params
 from repro.serving.request import Request, SLO
 
 

@@ -13,8 +13,8 @@ llama4 its interleaved MoE while everything lowers through one scan.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Sequence
 
 # ---------------------------------------------------------------------------
 # Block kinds

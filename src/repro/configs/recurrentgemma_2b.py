@@ -6,7 +6,7 @@ repeated 8 times plus the truncated final period (R, R) — exactly the
 released 26-layer model.
 """
 
-from repro.configs.base import ATTN, MLP, SWA, RGLRU, BlockSpec, ModelConfig, register
+from repro.configs.base import MLP, SWA, RGLRU, BlockSpec, ModelConfig, register
 
 _R = BlockSpec(mixer=RGLRU, ff=MLP)
 _L = BlockSpec(mixer=SWA, ff=MLP)

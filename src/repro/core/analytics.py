@@ -178,8 +178,12 @@ def _model_cost(cfg: ModelConfig, per_block) -> PhaseCost:
     f = b = g = a = w = kv = 0.0
     for blk in cfg.all_blocks:
         c = per_block(blk)
-        f += c.flops; b += c.hbm_bytes; g += c.gemm_flops; a += c.attn_flops
-        w += c.weight_bytes; kv += c.kv_bytes
+        f += c.flops
+        b += c.hbm_bytes
+        g += c.gemm_flops
+        a += c.attn_flops
+        w += c.weight_bytes
+        kv += c.kv_bytes
     return PhaseCost(f, b, g, a, w, kv)
 
 

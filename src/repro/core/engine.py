@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.estimator import PerfEstimator
-from repro.core.metadata import MetadataBuffer, ResourceStatus
+from repro.core.metadata import MetadataBuffer
 from repro.core.resource import ResourceManager
 from repro.core.scheduler import SchedulerConfig, SLOScheduler
 from repro.kvcache.paged import PagedKVPool
@@ -117,18 +117,46 @@ def _prefill_group_paged(params_slice, x, positions, *, cfg: ModelConfig):
     return x, tuple(entries)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "rep", "decode_share"),
+                   donate_argnums=(1,))
+def _fused_step(params, cache, x, positions, page_map, tokens, pos, active,
+                block_tables, *, cfg: ModelConfig, rep: int,
+                decode_share: float):
+    """One spatially-fused engine cycle (§3.5 co-execution): pattern-repeat
+    group ``rep`` of the in-flight prefill AND one continuous-batching
+    decode iteration, in a single dispatch. At repeat ``rep`` each layer's
+    prefill and decode attention share one fused launch whose grid slots
+    are interleaved by ``decode_share`` (the partition's ``m_i/M``);
+    elsewhere the decode pass streams paged KV as usual. Inactive slots'
+    sampled tokens are masked exactly like ``_decode_iteration``."""
+    x_p, logits, cache = T.fused_group_decode(
+        params, cache, x, positions, page_map, tokens, pos, cfg,
+        rep=rep, decode_share=decode_share, block_tables=block_tables)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    next_tokens = jnp.where(active, next_tokens, 0)
+    return x_p, next_tokens[:, None], cache
+
+
+class FusedExecutable(NamedTuple):
+    """One pre-built execution state of the resource manager's table
+    (§3.4.2): the jitted fused step with a PartitionConfig's decode_share
+    baked in as a static argument. ``ResourceManager.switch`` selecting a
+    different entry is the libsmctrl stream-swap analogue — a dict lookup,
+    never a rebuild."""
+    config_id: int
+    decode_share: float
+    fn: Callable
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_group_pages(cache_leaf, kv, page_map, rep):
     """Scatter one layer group's prefill K/V into the pooled pages of
     repeat ``rep``. cache_leaf: (R, P+1, ps, K, D) donated (in-place page
     update); kv: (B, Sp, K, D); page_map: (B, ceil(Sp/ps)) physical pages
-    (trash page past each request's length)."""
-    ps = cache_leaf.shape[2]
-    pad = page_map.shape[1] * ps - kv.shape[1]
-    if pad:
-        kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    kvb = kv.reshape(-1, ps, kv.shape[2], kv.shape[3]).astype(cache_leaf.dtype)
-    return cache_leaf.at[rep, page_map.reshape(-1)].set(kvb)
+    (trash page past each request's length). One jitted delegate of the
+    shared :func:`repro.models.transformer.scatter_prefill_pages` (the
+    fused step scatters through the same helper)."""
+    return T.scatter_prefill_pages(cache_leaf, kv, page_map, rep=rep)
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +169,7 @@ class EngineStats:
     paused_cycles: int = 0
     migrated: int = 0
     preempted: int = 0
+    fused_cycles: int = 0
 
 
 class DecodeWork(NamedTuple):
@@ -182,7 +211,9 @@ class PrefillTask:
     n_tokens: int = 0                     # total prompt tokens in the batch
     entries: List[tuple] = field(default_factory=list)
     rep: int = 0                          # next pattern-repeat group to run
-    page_map: Optional[np.ndarray] = None  # (B, blocks) physical pages
+    #: (B, blocks) physical pages, uploaded to device once at admission
+    #: (immutable for the task's lifetime — every group reuses it)
+    page_map: Optional[jax.Array] = None
 
 
 class BulletServer:
@@ -194,7 +225,7 @@ class BulletServer:
                  max_prefill_batch: int = 4,
                  sched: SchedulerConfig = SchedulerConfig(),
                  dtype=jnp.float32, paged: Optional[bool] = None,
-                 page_size: int = 16):
+                 page_size: int = 16, fused: Optional[bool] = None):
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -204,8 +235,6 @@ class BulletServer:
         self.slo = slo
         self.est = est or PerfEstimator()
         self.buffer = MetadataBuffer()
-        self.scheduler = SLOScheduler(cfg, self.est, slo, sched)
-        self.rm = ResourceManager(self.est.hw, sched.unit_quantum)
         self.max_slots = max_slots
         self.max_len = max_len
         self.max_prefill_batch = max_prefill_batch
@@ -218,6 +247,25 @@ class BulletServer:
                              "the block-paged cache (needs pure ATTN)")
         self.paged = paged
         self.page_size = page_size
+        # fused spatial prefill+decode execution (§3.5): default wherever
+        # the paged layout covers the architecture; the serial path stays
+        # as numerics reference and fallback
+        if fused is None:
+            fused = paged
+        elif fused and not paged:
+            raise ValueError(
+                f"{cfg.name}: fused spatial execution streams decode KV "
+                "from the block-paged pool; needs paged=True")
+        self.fused = fused
+        # the scheduler's contention estimates must match the execution
+        # mode: serial dispatches never co-locate phases spatially
+        sched = replace(sched, fused=fused)
+        self.scheduler = SLOScheduler(cfg, self.est, slo, sched)
+        # pre-build one fused executable per quantized partition (§3.4.2)
+        # so _switch selects among real execution states, not just numbers
+        self.rm = ResourceManager(
+            self.est.hw, sched.unit_quantum,
+            builder=self._build_fused_executable if fused else None)
         if paged:
             # unified device page pool: PagedKVPool block ids address these
             # pages directly; the trailing trash page absorbs masked writes
@@ -252,6 +300,19 @@ class BulletServer:
         #: virtual-clock replay to charge exactly the work that ran
         self.last_prefill_tokens: int = 0
         self.last_decode: Optional[DecodeWork] = None
+        #: True when the last step ran the fused spatial cycle (replay then
+        #: charges the Eq. 2 co-located max, not the serial sum)
+        self.last_fused: bool = False
+        #: config_id of the pre-built executable the last fused cycle ran
+        self.last_fused_exec: Optional[int] = None
+
+    def _build_fused_executable(self, part) -> FusedExecutable:
+        """ResourceManager builder: one fused-step launcher per quantized
+        PartitionConfig, its decode_share a static jit argument (compiled
+        lazily per activation shape; switching never recompiles)."""
+        fn = functools.partial(_fused_step, cfg=self.cfg,
+                               decode_share=round(part.decode_share, 6))
+        return FusedExecutable(part.config_id, part.decode_share, fn)
 
     # -- device block tables (paged mode) -------------------------------
     def _sync_tables(self) -> None:
@@ -442,6 +503,7 @@ class BulletServer:
             for i, r in enumerate(batch):
                 blocks = self.pool.table(r.rid).blocks[:-(-lens[i] // ps)]
                 page_map[i, :len(blocks)] = blocks
+            page_map = jnp.asarray(page_map)
         else:
             # temporary per-batch cache (migrated slot-wise at handoff)
             tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
@@ -469,13 +531,20 @@ class BulletServer:
         decision = self.scheduler.schedule(state, now, self._pending_meta())
         self._apply_reorder(decision.reorder)
         self._switch(decision.resources)
+        self._launch_prefill_group(task, now)
+        return True
+
+    def _launch_prefill_group(self, task: PrefillTask, now: float) -> None:
+        """Launch ONE pattern-repeat group of ``task`` (serial dispatch —
+        the fused cycle launches its group inside the fused executable
+        instead) and migrate to decode when the last group completes."""
         rep = task.rep
         p_slice = jax.tree.map(lambda a: a[rep], self.params["blocks"],
                                is_leaf=lambda a: hasattr(a, "shape"))
         if self.paged:
             task.x, kv_entries = _prefill_group_paged(
                 p_slice, task.x, task.positions, cfg=self.cfg)
-            pm = jnp.asarray(task.page_map)
+            pm = task.page_map
             rep_ix = jnp.int32(rep)
             for j, (k_e, v_e) in enumerate(kv_entries):
                 leaf = self.cache["blocks"][j]
@@ -488,6 +557,12 @@ class BulletServer:
                 p_slice, task.x, task.positions, c_slice, task.lengths,
                 cfg=self.cfg, repeat=rep)
             task.entries.append(new_entries)
+        self._prefill_group_done(task, now)
+
+    def _prefill_group_done(self, task: PrefillTask, now: float) -> None:
+        """Post-group bookkeeping shared by the serial and fused paths:
+        advance the group cursor, publish progress, and migrate to decode
+        when the last group completed."""
         task.rep += 1
         self.stats.prefill_cycles += 1
         self.last_prefill_tokens = task.n_tokens
@@ -498,7 +573,6 @@ class BulletServer:
         if task.rep >= self.cfg.n_pattern_repeats:
             self._finish_prefill(task, now)
             self.ptask = None
-        return True
 
     def _finish_prefill(self, task: PrefillTask, now: float) -> None:
         """Migrate the finished batch to decode. Paged mode: the KV already
@@ -605,6 +679,16 @@ class BulletServer:
             next_tokens, self.cache = _decode_iteration(
                 self.params, self.cache, self.tokens, self.pos, self.active,
                 cfg=self.cfg)
+        self._finish_decode_iteration(next_tokens, act_np, ctxs_ran,
+                                      streamed, now)
+        return True
+
+    def _finish_decode_iteration(self, next_tokens, act_np, ctxs_ran,
+                                 streamed, now: float) -> None:
+        """Post-iteration bookkeeping shared by the serial and fused
+        paths: advance slot state, stream tokens, retire finished
+        requests, publish DecodeStatus, and record what ran."""
+        n_ran = len(ctxs_ran)
         self.tokens = next_tokens
         self.pos = self.pos + act_np.astype(np.int32)
         self.stats.decode_iterations += 1
@@ -634,17 +718,69 @@ class BulletServer:
         self.last_decode = DecodeWork(
             n_ran, max(int(sum(ctxs_ran) / max(n_ran, 1)), 1), ctxs_ran,
             streamed)
+
+    # -- fused engine (spatial co-execution, §3.5) ------------------------
+    def _fused_cycle(self, now: float) -> bool:
+        """One fused engine cycle: the current prefill layer group and one
+        decode iteration launch as a single pre-built executable whose
+        fused schedule splits grid slots by the active partition's
+        ``decode_share``. One scheduling cycle covers both phases; the
+        §3.3.3 pause branch still borrows the whole machine for prefill
+        alone (serial group launch)."""
+        task = self.ptask
+        state = self.buffer.read()
+        decision = self.scheduler.schedule(state, now, self._pending_meta())
+        self._apply_reorder(decision.reorder)
+        self._switch(decision.resources)
+        if decision.pause_decode:
+            self.stats.paused_cycles += 1
+            self.buffer.state.decode.paused = True
+            self._launch_prefill_group(task, now)
+            return True
+        self.buffer.state.decode.paused = False
+        ex = self.rm.executable()
+
+        act_np = np.asarray(self.active)
+        pos_np = np.asarray(self.pos)
+        ctxs_ran = tuple(int(p) + 1 for p, a in zip(pos_np, act_np) if a)
+        n_ran = len(ctxs_ran)
+        if self._tables_dirty:
+            self._sync_tables()
+        n_b = self._decode_block_bucket(ctxs_ran)
+        streamed = (n_b * self.page_size * self.max_slots
+                    // max(n_ran, 1),) * n_ran
+        task.x, next_tokens, self.cache = ex.fn(
+            self.params, self.cache, task.x, task.positions,
+            task.page_map, self.tokens, self.pos, self.active,
+            self._device_tables(n_b), rep=task.rep)
+        self.last_fused = True
+        self.last_fused_exec = ex.config_id
+        self.stats.fused_cycles += 1
+
+        # decode-side bookkeeping first, prefill-side after: migration
+        # happens in _prefill_group_done, so slots that finish prefill
+        # this cycle take their first decode step next cycle
+        self._finish_decode_iteration(next_tokens, act_np, ctxs_ran,
+                                      streamed, now)
+        self._prefill_group_done(task, now)
         return True
 
     # -- main loop --------------------------------------------------------
     def step(self, now: float) -> bool:
         """One engine cycle at time ``now``: admit newly-pending prompts,
-        launch one prefill layer group, run one decode iteration. Returns
-        True if any engine did work. Drive this from an online frontend
-        (serving.frontend) or via :meth:`run` for offline batches."""
+        launch one prefill layer group, run one decode iteration — as a
+        single fused spatial dispatch when both phases are co-resident
+        (and the engine runs fused), as serial back-to-back dispatches
+        otherwise. Returns True if any engine did work. Drive this from an
+        online frontend (serving.frontend) or via :meth:`run` for offline
+        batches."""
         self.last_prefill_tokens = 0
         self.last_decode = None
+        self.last_fused = False
         did_admit = self._admit_prefill(now)
+        if (self.fused and self.ptask is not None
+                and bool(np.any(np.asarray(self.active)))):
+            return self._fused_cycle(now) or did_admit
         did_p = self._prefill_step(now)
         did_d = self._decode_cycle(now)
         return did_admit or did_p or did_d

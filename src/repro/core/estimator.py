@@ -24,7 +24,6 @@ import math
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import analytics as A
@@ -174,6 +173,83 @@ class PerfEstimator:
                              colocated=colocated, oversub=oversub,
                              grid=max(1, batch * max(cfg.n_kv_heads, 1)))
         return t * self._fb("decode")
+
+    def fused_cycle_time(self, cfg: ModelConfig, n_tokens: int,
+                         prefill_units: int, decode_units: int,
+                         batch: int, ctx: int, *,
+                         contexts: Optional[Sequence[int]] = None,
+                         page_size: Optional[int] = None,
+                         layer_group: Optional[int] = None) -> float:
+        """One fused engine cycle: Eq. 2's co-located
+        ``max(prefill, decode)/(1-s)`` for a prefill layer group and a
+        decode iteration sharing the device spatially — never the serial
+        sum of two back-to-back dispatches.
+
+        TPU adaptation of the partition semantics (DESIGN.md §2): resource
+        units divide *grid-slot (compute) occupancy*, so each phase's MXU
+        work runs on its ``m_i`` share with Eq. 2's d_c decay and p_c
+        contention — but a tile stream's async DMA saturates HBM at any
+        slot share, i.e. the fused schedule realizes the α_b→0 limit of
+        Eq. 2's d_b where ``M/(m·d_b) ≈ 1`` and only p_b survives. The two
+        phases' streams therefore share one pipe: their bytes SUM on the
+        bandwidth side while their compute co-runs on the partition —
+        which is exactly how decode's streaming hides under prefill's MXU
+        waves. Wave quantization (Eq. 1) applies to the merged tile grid.
+        """
+        lg = layer_group if layer_group is not None else len(cfg.pattern)
+        if n_tokens <= 0 or batch <= 0:
+            return self.serial_cycle_time(
+                cfg, n_tokens, batch, ctx, contexts=contexts,
+                page_size=page_size, layer_group=layer_group)
+        U = self.hw.total_units
+        u_p = max(1, min(prefill_units, U)) / U
+        u_d = max(1, min(decode_units, U)) / U
+        C = self.hw.total_flops * self.params.sustained_compute
+        B = self.hw.total_bw * self.params.sustained_bw
+        p_c, p_b = self.params.p_c, self.params.p_b
+
+        cp = A.prefill_cost(cfg, n_tokens, 0, include_head=False)
+        p_flops = cp.flops / cfg.n_layers * lg
+        p_bytes = cp.hbm_bytes / cfg.n_layers * lg
+        cd = A.decode_cost(cfg, batch, max(ctx, 1), contexts=contexts,
+                           page_size=page_size)
+        if contexts is not None:
+            batch = len(contexts)
+
+        # compute side: concurrent on disjoint slot shares -> max of the
+        # phases' partitioned Eq. 2 compute terms
+        t_c = max(p_flops / (C * u_p * self.params.d_c(u_p) * p_c),
+                  cd.flops / (C * u_d * self.params.d_c(u_d) * p_c))
+        # bandwidth side: one shared pipe -> the phases' bytes sum
+        t_b = (p_bytes + cd.hbm_bytes) / (B * p_b)
+        g_p = max(1, math.ceil(n_tokens / 128) * max(cfg.n_heads, 1))
+        g_d = max(1, batch * max(cfg.n_kv_heads, 1))
+        s = wave_quantization_idle(g_p + g_d,
+                                   self.hw.grid_slots * self.hw.n_chips)
+        t = max(t_c, t_b) / max(1.0 - s, 1e-2)
+        return t * self._fb("fused")
+
+    def serial_cycle_time(self, cfg: ModelConfig, n_tokens: int,
+                          batch: int, ctx: int, *,
+                          contexts: Optional[Sequence[int]] = None,
+                          page_size: Optional[int] = None,
+                          layer_group: Optional[int] = None) -> float:
+        """Temporal-sharing reference for the same engine cycle: the
+        prefill layer group and the decode iteration dispatched
+        back-to-back, each alone on the full machine (no partition, no
+        contention) — the serialized regime the fused path is measured
+        against. SUM of the dispatches."""
+        lg = layer_group if layer_group is not None else len(cfg.pattern)
+        U = self.hw.total_units
+        t = 0.0
+        if n_tokens > 0:
+            t += self.prefill_layer_time(cfg, n_tokens, 0, U,
+                                         colocated=False) * lg
+        if batch > 0:
+            t += self.decode_iter_time(cfg, batch, max(ctx, 1), U,
+                                       colocated=False, contexts=contexts,
+                                       page_size=page_size)
+        return t
 
     def lockstep_iter_time(self, cfg: ModelConfig,
                            prefill_parts: List[Tuple[int, int]],

@@ -12,14 +12,12 @@ surrogate's timings on unseen workload points?
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import List
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import analytics as A
 from repro.core.estimator import (EstimatorParams, HardwareSpec,
                                   PerfEstimator, ProfileSample)
 

@@ -18,7 +18,7 @@ grid slots.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.estimator import HardwareSpec
@@ -70,11 +70,21 @@ class ResourceManager:
                 self._exec[p.config_id] = builder(p)
 
     def nearest(self, res: ResourceStatus) -> PartitionConfig:
-        """Quantize an arbitrary (u, v) request onto the partition table."""
+        """Quantize an arbitrary (u, v) request onto the partition table.
+
+        Clamp-then-round can land off the table when ``total_units`` is not
+        a multiple of ``quantum`` (e.g. U=5, quantum=3: u=5 rounds to 6,
+        but the table tops out at (3, 2)); snap to the nearest entry that
+        actually exists instead of KeyError-ing mid-serve.
+        """
         U = self.hw.total_units
         u = max(0, min(U, res.prefill_units))
         u = round(u / self.quantum) * self.quantum
-        return self._by_units[(u, U - u)]
+        cfg = self._by_units.get((u, U - u))
+        if cfg is None:
+            cfg = min(self.partitions,
+                      key=lambda p: (abs(p.prefill_units - u), p.config_id))
+        return cfg
 
     def switch(self, res: ResourceStatus) -> PartitionConfig:
         """Instant re-configuration (Table 3): a table lookup."""

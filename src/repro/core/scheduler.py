@@ -20,8 +20,7 @@ interleave slots); ``unit_quantum`` mirrors libsmctrl's 2-SM granularity.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
@@ -44,6 +43,13 @@ class SchedulerConfig:
     #: violations")
     tpot_margin: float = 0.6
     ttft_margin: float = 0.8
+    #: execution mode the estimates must match: True (fused spatial
+    #: co-execution) applies Eq. 2's p_c/p_b contention whenever both
+    #: phases are resident; False (serial temporal dispatches) never
+    #: does — the phases time-share the whole device instead of
+    #: contending for partitions. BulletServer wires this to its own
+    #: fused/serial mode.
+    fused: bool = True
 
 
 @dataclass
@@ -71,7 +77,8 @@ class SLOScheduler:
         """Estimated TTFT (ms, normalized per prompt token) for the active
         prefill and all pending requests [(rid, arrival, prompt_len)]."""
         P, R = state.prefill, state.resources
-        colocated = state.decode.n_d > 0 and not state.decode.paused
+        colocated = (self.sc.fused and state.decode.n_d > 0
+                     and not state.decode.paused)
         out: Dict[int, float] = {}
         rem_layers = max(P.total_layers - P.layers_done, 0)
         per_layer = self.est.prefill_layer_time(
@@ -101,7 +108,7 @@ class SLOScheduler:
         D = state.decode
         if D.n_d == 0:
             return 0.0
-        colocated = state.prefill.active_rid is not None
+        colocated = self.sc.fused and state.prefill.active_rid is not None
         return 1e3 * self.est.decode_iter_time(
             self.cfg, D.n_d, max(D.context, 1), max(units, 1),
             colocated=colocated)
@@ -130,7 +137,7 @@ class SLOScheduler:
         has slack, temporarily pause decode (§3.3.3 "borrow")."""
         target = self.sc.tpot_margin * self.slo.tpot_ms
         n_tok = max(state.prefill.n_tokens, 1)
-        colocated = state.decode.n_d > 0
+        colocated = self.sc.fused and state.decode.n_d > 0
 
         # Algorithm 2: walk candidate splits, *estimating* both phases at
         # each step — maximizing prefill units is NOT monotone in prefill
@@ -183,10 +190,10 @@ class SLOScheduler:
         """Split proportionally to estimated phase demand (both violated)."""
         P, D = state.prefill, state.decode
         t_p = self.est.prefill_time(self.cfg, max(P.n_tokens, 1), total,
-                                    colocated=True)
+                                    colocated=self.sc.fused)
         t_d = self.est.decode_iter_time(self.cfg, max(D.n_d, 1),
                                         max(D.context, 1), total,
-                                        colocated=True)
+                                        colocated=self.sc.fused)
         frac = t_p / max(t_p + t_d, 1e-9)
         u = self._quantize(int(total * frac))
         u = min(max(u, self.sc.min_prefill_units),

@@ -21,15 +21,14 @@ Systems:
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.estimator import HardwareSpec, PerfEstimator
 from repro.core.metadata import SystemState
 from repro.core.profiler import SurrogateMachine
-from repro.core.scheduler import Decision, SchedulerConfig, SLOScheduler
+from repro.core.scheduler import SchedulerConfig, SLOScheduler
 from repro.core.resource import ResourceManager
 from repro.core.metadata import ResourceStatus
 from repro.serving.request import Phase, Request, ServingMetrics, SLO
@@ -327,7 +326,8 @@ class ServingSimulator:
             if steps > 5_000_000:
                 raise RuntimeError("simulator runaway")
             while ai < len(arrivals) and arrivals[ai].arrival <= t:
-                pending.append(arrivals[ai]); ai += 1
+                pending.append(arrivals[ai])
+                ai += 1
             if (ai >= len(arrivals) and not pending and not prefilling
                     and not decoding):
                 break

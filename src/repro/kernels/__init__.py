@@ -12,6 +12,7 @@ from repro.kernels.ops import (
     decode_attention_op,
     paged_decode_attention_op,
     bullet_attention_op,
+    bullet_attention_paged_op,
     rglru_scan_op,
     ssd_scan_op,
 )

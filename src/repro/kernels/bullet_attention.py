@@ -74,9 +74,11 @@ def _mk_index_arrays(phase: np.ndarray, dims_p: Tuple[int, ...],
     pi = di = 0
     for g in range(total):
         if phase[g] == 0:
-            p_idx[:, g] = up[:, pi]; pi += 1
+            p_idx[:, g] = up[:, pi]
+            pi += 1
         else:
-            d_idx[:, g] = ud[:, di]; di += 1
+            d_idx[:, g] = ud[:, di]
+            di += 1
         if g and phase[g] == 1:
             p_idx[:, g] = p_idx[:, g - 1]          # hold-last
         if g and phase[g] == 0:
@@ -163,6 +165,197 @@ def _bullet_kernel(phase_ref, pbh_ref, pqi_ref, pki_ref,
     def _fin_d():
         od_ref[0, 0] = (dacc[...] /
                         jnp.maximum(dlse[...], 1e-30)).astype(od_ref.dtype)
+
+
+def _bullet_paged_kernel(phase_ref, pbh_ref, pqi_ref, pki_ref,
+                         db_ref, dh_ref, dsi_ref, pos_ref, bt_ref,
+                         qp_ref, kp_ref, vp_ref,
+                         qd_ref, kpg_ref, vpg_ref,
+                         op_ref, od_ref,
+                         pm, plse, pacc, dm, dlse, dacc, *,
+                         bq, bk, ps, n_kv_p, n_b, causal, window,
+                         scale_p, scale_d):
+    """Fused schedule over prefill tiles and *paged* decode tiles.
+
+    Identical to ``_bullet_kernel`` on the prefill side; the decode side
+    streams one physical KV page per tile (``bt_ref`` is consumed by the
+    index maps — page ``bt[slot, col]`` covers absolute positions
+    ``[col·ps, (col+1)·ps)``), so masking is positional like
+    ``paged_decode_attention`` instead of table-driven ``kv_positions``.
+    """
+    del bt_ref                       # consumed by the index maps
+    g = pl.program_id(0)
+    ph = phase_ref[g]
+    ki = pki_ref[g]
+    qi = pqi_ref[g]
+    si = dsi_ref[g]
+
+    # ---------------- prefill tile (compute-bound) ----------------
+    @pl.when((ph == 0) & (ki == 0))
+    def _init_p():
+        pm[...] = jnp.full_like(pm, NEG_INF)
+        plse[...] = jnp.zeros_like(plse)
+        pacc[...] = jnp.zeros_like(pacc)
+
+    @pl.when(ph == 0)
+    def _prefill():
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        q = qp_ref[0].astype(jnp.float32) * scale_p
+        k = kp_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window > 0:
+            mask = mask & (k_pos > q_pos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(pm[...], logits.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(pm[...] - m_new)
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        plse[...] = plse[...] * alpha + p.sum(axis=-1, keepdims=True)
+        pacc[...] = pacc[...] * alpha + jax.lax.dot_general(
+            p, vp_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        pm[...] = m_new
+
+    @pl.when((ph == 0) & (ki == n_kv_p - 1))
+    def _fin_p():
+        op_ref[0] = (pacc[...] /
+                     jnp.maximum(plse[...], 1e-30)).astype(op_ref.dtype)
+
+    # ---------------- decode tile (one KV page, memory-bound) ------
+    @pl.when((ph == 1) & (si == 0))
+    def _init_d():
+        dm[...] = jnp.full_like(dm, NEG_INF)
+        dlse[...] = jnp.zeros_like(dlse)
+        dacc[...] = jnp.zeros_like(dacc)
+
+    @pl.when(ph == 1)
+    def _decode():
+        q = qd_ref[0, 0].astype(jnp.float32) * scale_d       # (G, D)
+        k = kpg_ref[0, :, 0].astype(jnp.float32)             # (ps, D)
+        logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        kvpos = si * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        pos = pos_ref[db_ref[g]]
+        valid = kvpos <= pos                                 # (1, ps)
+        logits = jnp.where(valid, logits, NEG_INF)
+        m_new = jnp.maximum(dm[...], logits.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(dm[...] - m_new)
+        p = jnp.where(valid, jnp.exp(logits - m_new), 0.0)
+        dlse[...] = dlse[...] * alpha + p.sum(axis=-1, keepdims=True)
+        dacc[...] = dacc[...] * alpha + jax.lax.dot_general(
+            p, vpg_ref[0, :, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dm[...] = m_new
+
+    @pl.when((ph == 1) & (si == n_b - 1))
+    def _fin_d():
+        od_ref[0, 0] = (dacc[...] /
+                        jnp.maximum(dlse[...], 1e-30)).astype(od_ref.dtype)
+
+
+def bullet_attention_paged(qp, kp, vp, qd, k_pages, v_pages, block_tables,
+                           pos, *, decode_share: float = 0.5,
+                           causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           group: int = 1, interpret: bool = False):
+    """Fused prefill+decode attention with decode KV in a block-paged pool.
+
+    Prefill: qp (BHp, Sp, D), kp/vp (BHp/group, Sp, D).
+    Decode:  qd (Bd, K, G, D), pages (P+1, ps, K, D) shared physical pool,
+             block_tables (Bd, n_b) int32 physical page per (slot, block) —
+             every entry must name a valid page (trash page past a slot's
+             live context), pos (Bd,) absolute position of the new token.
+    Returns (out_p (BHp, Sp, D), out_d (Bd, K, G, D)).
+
+    The decode tile stream walks ``(slot, kv_head, block)``; each tile's
+    page index comes from the scalar-prefetched block table, so — like
+    ``paged_decode_attention`` — only pages the tables name are ever
+    DMA'd, while the Bresenham schedule still hides that HBM traffic under
+    the prefill tiles' MXU work.
+    """
+    bhp, sp, d = qp.shape
+    bd, kh, gg, _ = qd.shape
+    ps = k_pages.shape[1]
+    n_b = block_tables.shape[1]
+    bq, bk = min(block_q, sp), min(block_k, sp)
+    assert sp % bq == 0 and sp % bk == 0
+    n_q, n_kv = sp // bq, sp // bk
+
+    dims_p = (bhp, n_q, n_kv)
+    dims_d = (bd, kh, n_b)
+    n_p_tiles = int(np.prod(dims_p))
+    n_d_tiles = int(np.prod(dims_d))
+    phase = build_schedule(n_p_tiles, n_d_tiles, decode_share)
+    p_idx, d_idx = _mk_index_arrays(phase, dims_p, dims_d)
+    pbh, pqi, pki = p_idx
+    db, dh, dsi = d_idx
+
+    kernel = functools.partial(
+        _bullet_paged_kernel,
+        bq=bq, bk=bk, ps=ps, n_kv_p=n_kv, n_b=n_b,
+        causal=causal, window=window,
+        scale_p=d ** -0.5, scale_d=d ** -0.5)
+
+    # Schedule arrays + pos + block tables ride in as scalar prefetch so
+    # the decode index maps can turn (slot, block) into a physical page.
+    out_p, out_d = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=9,
+            grid=(len(phase),),
+            in_specs=[
+                pl.BlockSpec((1, bq, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (pbh[g], pqi[g], 0)),
+                pl.BlockSpec((1, bk, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (pbh[g] // group, pki[g], 0)),
+                pl.BlockSpec((1, bk, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (pbh[g] // group, pki[g], 0)),
+                pl.BlockSpec((1, 1, gg, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (db[g], dh[g], 0, 0)),
+                pl.BlockSpec((1, ps, 1, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (bt[db[g], dsi[g]], 0, dh[g], 0)),
+                pl.BlockSpec((1, ps, 1, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (bt[db[g], dsi[g]], 0, dh[g], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bq, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (pbh[g], pqi[g], 0)),
+                pl.BlockSpec((1, 1, gg, d),
+                             lambda g, ph, pbh, pqi, pki, db, dh, dsi, pos,
+                             bt: (db[g], dh[g], 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, d), jnp.float32),
+                pltpu.VMEM((gg, 1), jnp.float32),
+                pltpu.VMEM((gg, 1), jnp.float32),
+                pltpu.VMEM((gg, d), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((bhp, sp, d), qp.dtype),
+            jax.ShapeDtypeStruct((bd, kh, gg, d), qd.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(jnp.asarray(phase), jnp.asarray(pbh), jnp.asarray(pqi),
+      jnp.asarray(pki), jnp.asarray(db), jnp.asarray(dh), jnp.asarray(dsi),
+      pos.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qp, kp, vp, qd, k_pages, v_pages)
+    return out_p, out_d
 
 
 def bullet_attention(qp, kp, vp, qd, kd, vd, kv_positions, pos, *,

@@ -115,6 +115,37 @@ def bullet_attention_op(qp, kp, vp, qd, kd, vd, kv_positions, pos, *,
     return out_p, od.reshape(bd, 1, h, d)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "decode_share", "causal", "window", "interpret"))
+def bullet_attention_paged_op(qp, kp, vp, qd, k_pages, v_pages, block_tables,
+                              pos, *, decode_share=0.5, causal=True,
+                              window=0, interpret=None):
+    """Fused hybrid-batch attention with paged decode KV (model layouts).
+
+    Prefill: qp (Bp,Sp,H,D), kp/vp (Bp,Sp,K,D).
+    Decode:  qd (Bd,1,H,D), pages (P+1,ps,K,D), block_tables (Bd,n_b) int32
+             physical pages (trash page past live context), pos (Bd,).
+    Returns (out_p (Bp,Sp,H,D), out_d (Bd,1,H,D)).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    bp, sp, h, d = qp.shape
+    kh = kp.shape[2]
+    g = h // kh
+    bd = qd.shape[0]
+    qpf = qp.transpose(0, 2, 1, 3).reshape(bp * h, sp, d)
+    kpf = kp.transpose(0, 2, 1, 3).reshape(bp * kh, sp, d)
+    vpf = vp.transpose(0, 2, 1, 3).reshape(bp * kh, sp, d)
+    qdr = qd[:, 0].reshape(bd, kh, g, d)
+    op, od = _bullet.bullet_attention_paged(
+        qpf, kpf, vpf, qdr, k_pages, v_pages, block_tables, pos,
+        decode_share=decode_share, causal=causal, window=window,
+        block_q=_pick_block(sp, 128), block_k=_pick_block(sp, 128),
+        group=g, interpret=interpret)
+    out_p = op.reshape(bp, h, sp, d).transpose(0, 2, 1, 3)
+    return out_p, od.reshape(bd, 1, h, d)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rglru_scan_op(a, b, h0=None, *, interpret=None):
     """a, b: (B,S,W). Returns (y (B,S,W), h_T (B,W))."""

@@ -22,8 +22,7 @@ import jax
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze_hlo
-from repro.launch.specs import (build_dryrun, input_specs,
-                                scan_trip_counts, sharded_resident_gb)
+from repro.launch.specs import build_dryrun, sharded_resident_gb
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "launch_results", "dryrun.json")

@@ -17,7 +17,6 @@ import argparse
 import json
 import re
 import time
-from collections import defaultdict
 
 import jax
 

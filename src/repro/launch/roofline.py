@@ -17,8 +17,6 @@ per-chip seconds against TPU v5e peaks (DESIGN.md §6).
 
 from __future__ import annotations
 
-import json
-import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

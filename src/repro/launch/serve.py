@@ -32,7 +32,7 @@ def _host(args):
     from repro.configs import get_config
     from repro.core.engine import BulletServer
     from repro.models import init_params
-    from repro.serving.request import Request, SLO, ServingMetrics
+    from repro.serving.request import Request, SLO
 
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)

@@ -10,14 +10,13 @@ Also builds the step functions + sharding trees the dry-run lowers:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, get_config
+from repro.configs.base import INPUT_SHAPES, ModelConfig, get_config
 from repro.models import transformer as T
 from repro.models.sharding import ShardingPolicy, make_policy
 from repro.training.trainer import make_train_step, train_step_shardings

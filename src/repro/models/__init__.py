@@ -2,5 +2,6 @@ from repro.models.transformer import (
     init_params, param_specs, param_count,
     init_cache, init_paged_cache, supports_paged_cache, cache_specs,
     forward, prefill, prefill_chunk, decode_step, encode,
+    fused_group_decode,
 )
 from repro.models.sharding import ShardingPolicy, make_policy

@@ -13,9 +13,7 @@ are validated against these (and their ref.py oracles) in interpret mode.
 
 from __future__ import annotations
 
-import functools
 import os
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +76,29 @@ def attention_decode_paged(q, k_pages, v_pages, block_tables, pos):
         return paged_decode_attention_op(q, k_pages, v_pages, block_tables,
                                          pos)
     return paged_decode_ref(q, k_pages, v_pages, block_tables, pos)
+
+
+def attention_fused_paged(qp, kp, vp, qd, k_pages, v_pages, block_tables,
+                          pos, *, decode_share: float = 0.5,
+                          causal: bool = True, window: int = 0):
+    """Backend-dispatching fused prefill+decode attention (model layout).
+
+    One call computes a prefill batch's attention (qp/kp/vp, (Bp,Sp,·,D))
+    AND a decode iteration's paged attention (qd (Bd,1,H,D) over the page
+    pool) — on TPU through the bullet co-execution schedule whose grid
+    interleaves the two tile streams by ``decode_share``, off-TPU through
+    the exact same XLA ops the serial engine uses (``attention_prefill`` +
+    ``attention_decode_paged``), so fused and serial engines are
+    token-identical on every backend.
+    """
+    if use_pallas_kernels() and qp.shape[1] % 128 == 0:
+        from repro.kernels import bullet_attention_paged_op
+        return bullet_attention_paged_op(
+            qp, kp, vp, qd, k_pages, v_pages, block_tables, pos,
+            decode_share=decode_share, causal=causal, window=window)
+    out_p = attention_prefill(qp, kp, vp, causal=causal, window=window)
+    out_d = attention_decode_paged(qd, k_pages, v_pages, block_tables, pos)
+    return out_p, out_d
 
 
 def gather_pages(pages, block_tables):

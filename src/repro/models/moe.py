@@ -10,7 +10,7 @@ all_to_all dispatch (``moe_ep.py``) — see EXPERIMENTS.md §Perf.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ Decode is the pure recurrence: h ← da·h + dt·(B ⊗ x); y = C·h + D·x.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

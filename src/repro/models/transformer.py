@@ -16,14 +16,13 @@ Param init and partition specs are derived from a single table
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ATTN, MLP, MOE, RGLRU, SSD, SWA, BlockSpec, ModelConfig
+from repro.configs.base import ATTN, MLP, RGLRU, SSD, SWA, BlockSpec, ModelConfig
 from repro.models import attention as attn_ops
 from repro.models import layers as L
 from repro.models.moe import moe_ffn
@@ -658,6 +657,101 @@ def _apply_block_decode(x, p, blk, cfg, policy, cache_entry, pos, cross_kv, *,
         x = x + _cross_attend(x, p, cfg, *cross_kv, policy)
     y, _ = _ff(x, p, blk, cfg, policy)
     return x + y, entry
+
+
+def scatter_prefill_pages(pages, kv, page_map, rep=None):
+    """Scatter a prefill batch's full-sequence K or V (B, Sp, K, D) into a
+    block-paged pool: prompt block ``(b, c)`` lands in physical page
+    ``page_map[b, c]`` (trash page past each request's length, so padded
+    rows are write-offs). ``pages`` is one layer's pool (P+1, ps, K, D),
+    or the repeat-stacked pool (R, P+1, ps, K, D) with ``rep`` naming the
+    slice to scatter into (no full-slice copy — the page indices extend
+    with the leading repeat index)."""
+    ps = pages.shape[-3]            # page size, stacked or not
+    pad = page_map.shape[1] * ps - kv.shape[1]
+    if pad:
+        kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kvb = kv.reshape(-1, ps, kv.shape[2], kv.shape[3]).astype(pages.dtype)
+    if rep is None:
+        return pages.at[page_map.reshape(-1)].set(kvb)
+    return pages.at[rep, page_map.reshape(-1)].set(kvb)
+
+
+def _apply_block_fused(x_p, x_d, p, blk, cfg, policy, positions_p, pos_d,
+                       cache_entry, block_tables, page_map, decode_share):
+    """Spatially-fused block application: one prefill layer of the current
+    layer group AND one decode layer of the same (repeat, pattern) position
+    share a single attention launch (paper §3.5 co-execution).
+
+    x_p: (Bp, Sp, D) prefill activations; x_d: (Bd, 1, D) decode
+    activations; cache_entry: this layer's paged pool {(P+1, ps, K, D)}.
+    The decode token's K/V is written to its slot's page and the prefill
+    group's K/V is scattered into its requests' pages (disjoint page sets:
+    mid-prefill slots sit on the trash page in ``block_tables``). Returns
+    (x_p, x_d, new_cache_entry).
+    """
+    assert blk.mixer == ATTN, blk.mixer
+    hp = L.rms_norm(x_p, p["ln1"], cfg.rmsnorm_eps)
+    qp, kp_new, vp_new = _project_qkv(hp, p, cfg, positions_p, policy)
+    hd = L.rms_norm(x_d, p["ln1"], cfg.rmsnorm_eps)
+    qd, kd_new, vd_new = _project_qkv(hd, p, cfg, pos_d[:, None], policy)
+    kpg, vpg = attn_ops.write_paged_kv(
+        cache_entry["k"], cache_entry["v"], kd_new, vd_new,
+        block_tables, pos_d)
+    kpg = scatter_prefill_pages(kpg, kp_new, page_map)
+    vpg = scatter_prefill_pages(vpg, vp_new, page_map)
+    op, od = attn_ops.attention_fused_paged(
+        qp, kp_new, vp_new, qd, kpg, vpg, block_tables, pos_d,
+        decode_share=decode_share, causal=True, window=0)
+    x_p = x_p + op.reshape(*op.shape[:2], -1) @ p["wo"]
+    yp, _ = _ff(x_p, p, blk, cfg, policy)
+    x_p = x_p + yp
+    x_d = x_d + od.reshape(*od.shape[:2], -1) @ p["wo"]
+    yd, _ = _ff(x_d, p, blk, cfg, policy)
+    x_d = x_d + yd
+    return x_p, x_d, {"k": kpg, "v": vpg}
+
+
+def fused_group_decode(params, cache, x_p, positions, page_map, tokens, pos,
+                       cfg: ModelConfig, policy=None, *, rep: int,
+                       decode_share: float, block_tables):
+    """One fused engine cycle: pattern-repeat group ``rep`` of an in-flight
+    prefill AND a full continuous-batching decode iteration, in a single
+    computation (the serial engine dispatches these back-to-back).
+
+    The decode pass walks every layer; at repeat ``rep`` each layer fuses
+    with the matching prefill layer via :func:`_apply_block_fused` (the
+    bullet co-execution schedule on TPU), scattering the group's prompt KV
+    into pooled pages as it goes. Requires the block-paged cache layout
+    (``supports_paged_cache``). Returns (x_p, decode_logits (B, V),
+    new_cache) — layer math is op-for-op the serial path's, so token
+    streams are identical.
+    """
+    assert supports_paged_cache(cfg), cfg.pattern
+    x_d = embed_tokens(params, tokens, cfg, policy)
+    blocks = [dict(entry) for entry in cache["blocks"]]
+
+    def _is_leaf(a):
+        return hasattr(a, "shape")
+
+    for r in range(cfg.n_pattern_repeats):
+        for j, blk in enumerate(cfg.pattern):
+            p_rj = jax.tree.map(lambda a, _r=r: a[_r], params["blocks"][j],
+                                is_leaf=_is_leaf)
+            entry_rj = {key: leaf[r] for key, leaf in blocks[j].items()}
+            if r == rep:
+                x_p, x_d, new_entry = _apply_block_fused(
+                    x_p, x_d, p_rj, blk, cfg, policy, positions, pos,
+                    entry_rj, block_tables, page_map, decode_share)
+            else:
+                x_d, new_entry = _apply_block_decode(
+                    x_d, p_rj, blk, cfg, policy, entry_rj, pos, None,
+                    block_tables=block_tables)
+            blocks[j] = {key: blocks[j][key].at[r].set(new_entry[key])
+                         for key in blocks[j]}
+    x_d = L.rms_norm(x_d, params["final_norm"], cfg.rmsnorm_eps)
+    logits = lm_logits(params, x_d, cfg, policy)[:, 0]
+    return x_p, logits, {"blocks": tuple(blocks)}
 
 
 # ---------------------------------------------------------------------------

@@ -67,30 +67,34 @@ class VirtualClock:
 
 
 def estimator_cycle_cost(server: BulletServer) -> float:
-    """Predicted duration of the engine cycle that just ran: a prefill
-    layer group co-run with a decode iteration (max of the two — they
-    share the device spatially). Reads the engine's last_prefill_tokens /
-    last_decode record of what step() actually executed, so a prefill's
-    final group and the draining decode iterations are charged too. Lets
-    a VirtualClock replay advance on the same PerfEstimator timeline the
-    simulator runs on."""
+    """Predicted duration of the engine cycle that just ran.
+
+    Reads the engine's last_prefill_tokens / last_decode / last_fused
+    record of what step() actually executed, and charges it the way it
+    ran: a **fused** cycle costs the paper's Eq. 2 co-located
+    ``max(prefill, decode)/(1-s)`` — each phase on its partition's units
+    with p_c/p_b contention — while a **serial** cycle costs the SUM of
+    its dispatches, each alone on the full machine (temporal sharing has
+    no partition and no contention, but pays both phases back-to-back).
+    The decode charge uses the KV bytes the iteration actually streamed,
+    recorded per slot (bucketed live pages / dense ``max_len`` rows).
+    Lets a VirtualClock replay advance on the same PerfEstimator timeline
+    the simulator runs on."""
     est, cfg = server.est, server.cfg
     R = server.buffer.state.resources
-    dt = 0.0
-    if server.last_prefill_tokens:
-        dt = max(dt, est.prefill_layer_time(
-            cfg, server.last_prefill_tokens, 0, max(R.prefill_units, 1),
-            colocated=server.last_decode is not None) * len(cfg.pattern))
-    if server.last_decode is not None:
-        w = server.last_decode
-        # charge the KV bytes the iteration actually streamed, recorded by
-        # the engine per slot: bucketed live pages (paged) or the full
-        # max_len row (dense fallback) — not a batch × mean collapse
-        dt = max(dt, est.decode_iter_time(
-            cfg, max(w.batch, 1), max(w.mean_context, 1),
-            max(R.decode_units, 1),
-            contexts=w.streamed or None,
-            colocated=server.last_prefill_tokens > 0))
+    w = server.last_decode
+    if server.last_fused and w is not None and server.last_prefill_tokens:
+        dt = est.fused_cycle_time(
+            cfg, server.last_prefill_tokens,
+            max(R.prefill_units, 1), max(R.decode_units, 1),
+            max(w.batch, 1), max(w.mean_context, 1),
+            contexts=w.streamed or None)
+        return dt if dt > 0 else 1e-4
+    dt = est.serial_cycle_time(
+        cfg, server.last_prefill_tokens,
+        w.batch if w is not None else 0,
+        max(w.mean_context, 1) if w is not None else 1,
+        contexts=(w.streamed or None) if w is not None else None)
     return dt if dt > 0 else 1e-4
 
 

@@ -8,8 +8,7 @@ sharded — the standard large-model fallback, noted in DESIGN.md.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

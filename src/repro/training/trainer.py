@@ -3,7 +3,6 @@ metrics."""
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

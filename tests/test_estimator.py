@@ -1,15 +1,13 @@
 """Performance estimator: Eq. 1/2 behavior, profile-fit recovery, and
 property tests on monotonicity/contention invariants."""
 
-import math
 
 import hypothesis.strategies as st
 import pytest
 from hypothesis import given, settings
 
 from repro.configs import get_config
-from repro.core.estimator import (EstimatorParams, HardwareSpec,
-                                  PerfEstimator, fit_params,
+from repro.core.estimator import (HardwareSpec, PerfEstimator, fit_params,
                                   wave_quantization_idle)
 from repro.core.profiler import (SurrogateMachine, TRUE_PARAMS,
                                  run_profiling)

@@ -1,0 +1,270 @@
+"""Fused spatial prefill+decode execution: kernel numerics, engine
+token-stream equivalence vs the serial path, pre-built executable
+switching through the resource manager, and Eq. 2 cycle charging."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import BulletServer, FusedExecutable
+from repro.core.estimator import PerfEstimator
+from repro.core.metadata import ResourceStatus
+from repro.core.scheduler import Decision, SchedulerConfig
+from repro.kernels import (bullet_attention_paged_op, flash_attention_op,
+                           paged_decode_attention_op)
+from repro.models.attention import paged_decode_ref
+from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                    estimator_cycle_cost)
+from repro.serving.request import Phase, Request, SLO
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 2 pattern repeats -> decode iterations co-resident with in-flight
+    # prefill layer groups, the regime the fused cycle exists for
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    from repro.models import init_params
+    params = init_params(cfg, KEY, jnp.float32)
+    return cfg, params
+
+
+def mk_server(cfg, params, **kw):
+    kw.setdefault("slo", SLO(3.0, 150.0))
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("max_prefill_batch", 1)
+    kw.setdefault("sched", SchedulerConfig(max_decode_pause_cycles=0))
+    return BulletServer(cfg, params, **kw)
+
+
+def submit_batch(server, cfg, n=6, seed=0, out_len=8):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        plen = int(rng.integers(4, 16))
+        r = Request(rid=rid, arrival=0.0, prompt_len=plen, output_len=out_len)
+        server.submit(r, rng.integers(0, cfg.vocab_size, plen))
+        reqs.append(r)
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# kernel numerics (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("share", [0.0, 0.25, 0.5, 0.75, 1.0])
+def test_bullet_paged_kernel_matches_refs(share):
+    Bp, Sp, H, K, D = 2, 32, 4, 2, 32
+    Bd, ps, nb = 2, 16, 4
+    P = Bd * nb
+    ks = jax.random.split(KEY, 6)
+    qp = jax.random.normal(ks[0], (Bp, Sp, H, D))
+    kp = jax.random.normal(ks[1], (Bp, Sp, K, D))
+    vp = jax.random.normal(ks[2], (Bp, Sp, K, D))
+    qd = jax.random.normal(ks[3], (Bd, 1, H, D))
+    kpg = jax.random.normal(ks[4], (P + 1, ps, K, D))
+    vpg = jax.random.normal(ks[5], (P + 1, ps, K, D))
+    bt = jnp.asarray(np.arange(P, dtype=np.int32).reshape(Bd, nb))
+    pos = jnp.array([40, 13])
+    op, od = bullet_attention_paged_op(qp, kp, vp, qd, kpg, vpg, bt, pos,
+                                       decode_share=share, interpret=True)
+    ref_p = flash_attention_op(qp, kp, vp, interpret=True)
+    ref_d = paged_decode_ref(qd, kpg, vpg, bt, pos)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(ref_p), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(ref_d), atol=2e-5)
+    # and against the Pallas paged decode kernel itself
+    ref_dk = paged_decode_attention_op(qd, kpg, vpg, bt, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(ref_dk), atol=2e-5)
+
+
+def test_bullet_paged_kernel_trash_page_masked():
+    """Table entries past a slot's live context point at the trash page;
+    positional masking must keep its contents out of the output."""
+    Bd, ps, nb, K, H, D = 1, 16, 4, 2, 4, 32
+    Sp = 32
+    ks = jax.random.split(KEY, 5)
+    qp = jax.random.normal(ks[0], (1, Sp, H, D))
+    kp = jax.random.normal(ks[1], (1, Sp, K, D))
+    vp = jax.random.normal(ks[2], (1, Sp, K, D))
+    qd = jax.random.normal(ks[3], (Bd, 1, H, D))
+    kpg = jax.random.normal(ks[4], (nb + 1, ps, K, D))
+    vpg = jax.random.normal(jax.random.fold_in(KEY, 9), (nb + 1, ps, K, D))
+    pos = jnp.array([ps + 3])                     # live context: 2 pages
+    bt_live = jnp.asarray([[0, 1, nb, nb]], jnp.int32)     # trash tail
+    bt_other = jnp.asarray([[0, 1, 2, 3]], jnp.int32)      # real pages tail
+    _, od_a = bullet_attention_paged_op(qp, kp, vp, qd, kpg, vpg, bt_live,
+                                        pos, interpret=True)
+    _, od_b = bullet_attention_paged_op(qp, kp, vp, qd, kpg, vpg, bt_other,
+                                        pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(od_a), np.asarray(od_b), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence (acceptance: identical token streams)
+# ---------------------------------------------------------------------------
+
+def test_fused_engine_matches_serial_engine(setup):
+    """The fused spatial cycle is a pure execution-schedule change: token
+    streams are identical to the serial engine on the same requests, and
+    fused cycles actually ran (phases co-resident)."""
+    cfg, params = setup
+    for seed in (0, 5):
+        serial = mk_server(cfg, params, fused=False)
+        fused = mk_server(cfg, params)                # default: fused
+        assert fused.fused and fused.paged
+        assert not serial.fused
+        submit_batch(serial, cfg, seed=seed)
+        submit_batch(fused, cfg, seed=seed)
+        out_s = serial.run()
+        out_f = fused.run()
+        assert out_f == out_s, seed
+        assert fused.stats.fused_cycles > 0
+        assert serial.stats.fused_cycles == 0
+        fused.pool.check_invariants()
+        assert fused.pool.free_blocks == fused.pool.n_blocks
+
+
+def test_fused_replay_matches_serial_replay(setup):
+    """Same equivalence through the online frontend on an estimator-clocked
+    virtual replay (the acceptance-criteria workload shape)."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    # simultaneous arrivals + max_prefill_batch=1: later admissions'
+    # layer groups co-run with earlier requests' decode iterations
+    reqs = [(rid, 0.0, int(rng.integers(4, 14)), 6) for rid in range(6)]
+    prompts = {rid: rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+               for rid, _, plen, _ in reqs}
+    outs = {}
+    for fused in (False, True):
+        server = mk_server(cfg, params, fused=fused)
+        fe = OnlineFrontend(server, VirtualClock(),
+                            cycle_cost=estimator_cycle_cost)
+        for rid, arr, plen, olen in reqs:
+            fe.submit(Request(rid=rid, arrival=arr, prompt_len=plen,
+                              output_len=olen), prompts[rid])
+        m = fe.run()
+        assert m.n_requests == 6
+        assert not fe.truncated
+        outs[fused] = (dict(server.outputs), server.stats.fused_cycles)
+    assert outs[True][0] == outs[False][0]
+    assert outs[True][1] > 0 and outs[False][1] == 0
+
+
+def test_fused_requires_paged_cache(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        mk_server(cfg, params, paged=False, fused=True)
+    dense = mk_server(cfg, params, paged=False)
+    assert not dense.fused                       # serial fallback
+    mamba = get_config("mamba2-2.7b").reduced()
+    from repro.models import init_params
+    mparams = init_params(mamba, jax.random.PRNGKey(1), jnp.float32)
+    server = mk_server(mamba, mparams)
+    assert not server.paged and not server.fused
+
+
+def test_scheduler_contention_flag_tracks_mode(setup):
+    cfg, params = setup
+    assert mk_server(cfg, params).scheduler.sc.fused
+    assert not mk_server(cfg, params, fused=False).scheduler.sc.fused
+
+
+# ---------------------------------------------------------------------------
+# scheduler -> resource loop: pre-built executables switch, never rebuild
+# ---------------------------------------------------------------------------
+
+def test_decision_switches_prebuilt_executable(setup):
+    """A Decision.resources change must change which pre-built fused
+    executable the next cycle runs — by table lookup, with no rebuild."""
+    cfg, params = setup
+    server = mk_server(cfg, params, max_slots=2)
+    assert all(isinstance(e, FusedExecutable)
+               for e in server.rm._exec.values())
+    exec_before = dict(server.rm._exec)          # identity snapshot
+    rng = np.random.default_rng(7)
+    server.submit(Request(rid=0, arrival=0.0, prompt_len=6, output_len=30),
+                  rng.integers(0, cfg.vocab_size, 6))
+    now = 0.0
+    while not (server.slot_req[0] is not None
+               and server.slot_req[0].phase == Phase.DECODE):
+        server.step(now)
+        now += 1e-3
+    server.submit(Request(rid=1, arrival=now, prompt_len=20, output_len=4),
+                  rng.integers(0, cfg.vocab_size, 20))
+
+    U = server.est.hw.total_units
+    ran = []
+    for u in (U - 2, 2):                         # prefill-heavy, then -light
+        decision = Decision(ResourceStatus(u, U - u))
+        server.scheduler.schedule = types.MethodType(
+            lambda self, state, t, pending, d=decision: d, server.scheduler)
+        n_before = server.stats.fused_cycles
+        server.step(now)
+        now += 1e-3
+        assert server.stats.fused_cycles == n_before + 1, u
+        want = server.rm.nearest(ResourceStatus(u, U - u))
+        assert server.last_fused_exec == want.config_id
+        assert server.rm.current.config_id == want.config_id
+        ran.append(server.last_fused_exec)
+    assert ran[0] != ran[1]                      # the switch actually took
+    # table lookup, not a rebuild: same executable objects as at init
+    assert all(server.rm._exec[cid] is exec_before[cid]
+               for cid in exec_before)
+    lat = server.rm.switch_latencies
+    assert lat and sorted(lat)[len(lat) // 2] < 50e-6
+    server.run()
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 cycle charging
+# ---------------------------------------------------------------------------
+
+def test_fused_cycle_time_below_serial_sum_at_mixed_occupancy():
+    est = PerfEstimator()
+    cfg = get_config("qwen3-1.7b")
+    U = est.hw.total_units
+    n_tok, batch, ctx = 4096, 16, 1024           # mixed occupancy
+    serial = est.serial_cycle_time(cfg, n_tok, batch, ctx)
+    fused = min(est.fused_cycle_time(cfg, n_tok, u, U - u, batch, ctx)
+                for u in range(2, U, 2))
+    assert fused < serial
+    # one-sided mixes honestly pay the contention cost instead
+    serial_1s = est.serial_cycle_time(cfg, 256, 32, 2048)
+    fused_1s = min(est.fused_cycle_time(cfg, 256, u, U - u, 32, 2048)
+                   for u in range(2, U, 2))
+    assert fused_1s > serial_1s
+    # degenerate cycles (one phase absent) fall back to the serial charge
+    assert est.fused_cycle_time(cfg, n_tok, U, 0, 0, 1) == \
+        est.serial_cycle_time(cfg, n_tok, 0, 1)
+
+
+def test_replay_charges_fused_max_and_serial_sum(setup):
+    """estimator_cycle_cost must charge a fused step Eq. 2's co-located
+    max and a serial step the sum of its dispatches."""
+    cfg, params = setup
+    server = mk_server(cfg, params)
+    est = server.est
+    server.last_prefill_tokens = 24
+    server.last_decode = types.SimpleNamespace(
+        batch=2, mean_context=16, streamed=(32, 32))
+    R = server.buffer.state.resources
+    R.prefill_units, R.decode_units = 24, 8
+    server.last_fused = True
+    got_fused = estimator_cycle_cost(server)
+    assert got_fused == pytest.approx(est.fused_cycle_time(
+        cfg, 24, 24, 8, 2, 16, contexts=(32, 32)))
+    server.last_fused = False
+    got_serial = estimator_cycle_cost(server)
+    assert got_serial == pytest.approx(est.serial_cycle_time(
+        cfg, 24, 2, 16, contexts=(32, 32)))
+    # the serial engine pays both dispatches; prefill-only cycles charge
+    # just the group
+    server.last_decode = None
+    prefill_only = estimator_cycle_cost(server)
+    assert prefill_only < got_serial

@@ -1,7 +1,6 @@
 """Model-zoo unit tests: attention variants, MoE routing, recurrences,
 sharding spec consistency."""
 
-import dataclasses
 
 import hypothesis.strategies as st
 import jax
@@ -11,7 +10,6 @@ import pytest
 from hypothesis import given, settings
 
 from repro.configs import get_config
-from repro.configs.base import MOE
 from repro.models import attention as A
 from repro.models import init_params, param_specs, init_cache, cache_specs
 from repro.models.moe import moe_ffn, route_topk, _capacity

@@ -1,0 +1,56 @@
+"""ResourceManager: partition-table quantization and instant switching."""
+
+from repro.core.estimator import HardwareSpec
+from repro.core.metadata import ResourceStatus
+from repro.core.resource import ResourceManager, default_partitions
+
+
+def test_nearest_snaps_off_table_requests():
+    """Regression: when total_units is not a multiple of the quantum,
+    clamp-then-round could produce a (u, U-u) key absent from the table
+    (U=5, quantum=3: u=5 rounds to 6 -> KeyError). nearest must snap to
+    the closest entry that exists instead."""
+    hw = HardwareSpec(n_chips=1, units_per_chip=5)
+    rm = ResourceManager(hw, quantum=3)
+    assert [(p.prefill_units, p.decode_units) for p in rm.partitions] == \
+        [(0, 5), (3, 2)]
+    # pre-fix this raised KeyError((6, -1))
+    part = rm.nearest(ResourceStatus(5, 0))
+    assert (part.prefill_units, part.decode_units) == (3, 2)
+    # the ISSUE's quantum=2 example: u=5 lands on the (4, 1) entry
+    rm2 = ResourceManager(hw, quantum=2)
+    part2 = rm2.nearest(ResourceStatus(5, 0))
+    assert (part2.prefill_units, part2.decode_units) == (4, 1)
+
+
+def test_nearest_total_sweep_never_raises():
+    for n_chips, upc, quantum in ((1, 5, 2), (1, 5, 3), (1, 7, 4),
+                                  (2, 3, 4), (4, 8, 2)):
+        hw = HardwareSpec(n_chips=n_chips, units_per_chip=upc)
+        rm = ResourceManager(hw, quantum=quantum)
+        keys = {(p.prefill_units, p.decode_units) for p in rm.partitions}
+        for u in range(-2, hw.total_units + 3):
+            part = rm.nearest(ResourceStatus(u, hw.total_units - u))
+            assert (part.prefill_units, part.decode_units) in keys
+
+
+def test_default_partitions_cover_extremes():
+    hw = HardwareSpec()
+    parts = default_partitions(hw, quantum=2)
+    assert parts[0].prefill_units == 0                      # decode-only
+    assert parts[-1].decode_units == hw.total_units - parts[-1].prefill_units
+    assert any(p.decode_units == 0 for p in parts)          # prefill-only
+    shares = [p.decode_share for p in parts]
+    assert shares == sorted(shares, reverse=True)
+
+
+def test_switch_is_table_lookup():
+    hw = HardwareSpec()
+    built = []
+    rm = ResourceManager(hw, quantum=2, builder=lambda p: built.append(p) or p)
+    n_built = len(built)
+    assert n_built == len(rm.partitions)        # pre-built once, at init
+    for u in (0, 6, 17, 32, 9):
+        rm.switch(ResourceStatus(u, hw.total_units - u))
+    assert len(built) == n_built                # switching never rebuilds
+    assert all(t < 1e-3 for t in rm.switch_latencies)

@@ -1,7 +1,6 @@
 """SLO-aware scheduler (Algorithm 1): branch behavior + safety properties."""
 
 import hypothesis.strategies as st
-import pytest
 from hypothesis import given, settings
 
 from repro.configs import get_config

@@ -8,7 +8,7 @@ from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
 from repro.core.profiler import SurrogateMachine, run_profiling
 from repro.core.simulate import SimConfig, ServingSimulator
 from repro.serving.request import Phase, WORKLOAD_SLOS
-from repro.serving.workload import DATASETS, generate_trace
+from repro.serving.workload import generate_trace
 
 CFG = get_config("llama3.1-8b")
 HW = HardwareSpec(n_chips=2)

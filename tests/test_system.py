@@ -6,9 +6,6 @@ import sys
 import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import get_config, list_configs, ASSIGNED_ARCHS
 from repro.configs.base import INPUT_SHAPES

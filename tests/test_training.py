@@ -12,8 +12,7 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_params
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
-from repro.training.optimizer import (make_adafactor, make_adamw,
-                                      optimizer_for)
+from repro.training.optimizer import make_adafactor, optimizer_for
 from repro.training.trainer import cross_entropy, make_train_step
 
 CFG = get_config("granite-3-2b").reduced()
