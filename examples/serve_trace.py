@@ -2,7 +2,11 @@
 
 Profiles the hardware surrogate, fits the Bullet performance estimator
 (§3.2.2), then serves the same ShareGPT-shaped Poisson trace through the
-Bullet orchestrator and a SGLang-style chunked-prefill baseline.
+Bullet orchestrator and a SGLang-style chunked-prefill baseline — and
+finally demonstrates the *adaptive* half of the system: a real-engine
+replay whose clock runs on hidden ground-truth timings while the
+OnlineRefitter re-fits the estimator live (per-interval
+predicted-vs-actual error printed as it shrinks).
 
     PYTHONPATH=src python examples/serve_trace.py [rate_req_s]
 """
@@ -12,11 +16,65 @@ import os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
-from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+from repro.core.estimator import (EstimatorParams, HardwareSpec,
+                                  PerfEstimator, fit_params)
 from repro.core.profiler import SurrogateMachine, run_profiling
 from repro.core.simulate import SimConfig, ServingSimulator
 from repro.serving.request import WORKLOAD_SLOS
 from repro.serving.workload import generate_trace
+
+
+def refit_demo():
+    """Closed-loop refit on the real engine (docs/PERF_MODEL.md §refit):
+    replay against surrogate-truth cycle times starting from a stale
+    offline fit, printing the per-interval estimator error."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.engine import BulletServer
+    from repro.models import init_params
+    from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                        oracle_cycle_cost)
+    from repro.serving.request import Request
+    from repro.serving.workload import fit_trace_to_context
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    hw = HardwareSpec(n_chips=2)
+    trace = fit_trace_to_context(
+        generate_trace("sharegpt", 8.0, 4.0, seed=1, max_requests=12), 64)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    stale = EstimatorParams(alpha_c=1.45, alpha_b=0.95, p_c=0.72, p_b=0.62,
+                            sustained_compute=0.55, sustained_bw=0.55)
+    server = BulletServer(cfg, params, slo=WORKLOAD_SLOS["sharegpt"],
+                          est=PerfEstimator(hw, stale), max_slots=4,
+                          max_len=64, refit_interval=16)
+    fe = OnlineFrontend(server, VirtualClock(),
+                        cycle_cost=oracle_cycle_cost(
+                            SurrogateMachine(hw, seed=11)))
+    for r in trace:
+        fe.submit(Request(rid=r.rid, arrival=r.arrival,
+                          prompt_len=r.prompt_len, output_len=r.output_len),
+                  np.random.default_rng(r.rid).integers(
+                      0, cfg.vocab_size, r.prompt_len, dtype=np.int32))
+    fe.run()
+    print("\nonline refit (closed loop): stale offline fit vs live cycles")
+    print(f"  {'cycles':>12s} {'mean |pred/actual-1|':>22s} "
+          f"{'refits applied':>15s}")
+    pa = list(server.pred_actual)
+    interval = 48
+    for lo in range(0, len(pa), interval):
+        hi = min(lo + interval, len(pa))
+        chunk = [abs(p / a - 1) for _, p, a in pa[lo:hi] if a > 0]
+        if not chunk:
+            continue
+        # refit_log holds the index of the FIRST cycle priced with the
+        # new params, so a swap at i belongs to the interval [i, …)
+        applied = sum(1 for i in server.refit_log if lo <= i < hi)
+        print(f"  {lo:5d}-{hi:5d} {sum(chunk) / len(chunk):22.3f} "
+              f"{applied:15d}")
+    print(f"  refits applied: {server.stats.refits} "
+          f"(rejected by hysteresis: {server.stats.refits_rejected}); "
+          f"fitted params: {server.est.params}")
 
 
 def main():
@@ -47,6 +105,7 @@ def main():
         print(f"{system:16s} {m.mean_ttft_s*1e3:8.1f}ms "
               f"{m.p90_ttft_s*1e3:8.1f}ms {m.mean_tpot_ms:7.1f}ms "
               f"{m.throughput_tok_s:10.0f} {m.goodput*100:7.1f}%")
+    refit_demo()
 
 
 if __name__ == "__main__":

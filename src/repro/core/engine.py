@@ -30,15 +30,17 @@ from __future__ import annotations
 
 import functools
 import time
+from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Deque, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.estimator import PerfEstimator
+from repro.core.estimator import (CycleObservation, OnlineRefitter,
+                                  PerfEstimator, predict_cycle)
 from repro.core.metadata import MetadataBuffer
 from repro.core.resource import ResourceManager
 from repro.core.scheduler import SchedulerConfig, SLOScheduler
@@ -170,6 +172,10 @@ class EngineStats:
     migrated: int = 0
     preempted: int = 0
     fused_cycles: int = 0
+    #: estimator refits applied (params actually swapped) vs. attempts the
+    #: OnlineRefitter rejected on its hysteresis margin
+    refits: int = 0
+    refits_rejected: int = 0
 
 
 class DecodeWork(NamedTuple):
@@ -225,7 +231,8 @@ class BulletServer:
                  max_prefill_batch: int = 4,
                  sched: SchedulerConfig = SchedulerConfig(),
                  dtype=jnp.float32, paged: Optional[bool] = None,
-                 page_size: int = 16, fused: Optional[bool] = None):
+                 page_size: int = 16, fused: Optional[bool] = None,
+                 refit=None, refit_interval: int = 32):
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -266,6 +273,36 @@ class BulletServer:
         self.rm = ResourceManager(
             self.est.hw, sched.unit_quantum,
             builder=self._build_fused_executable if fused else None)
+        # the scheduler may only propose partitions this table pre-built
+        # (fused mode additionally searches them under the fused-cycle
+        # objective); _switch asserts the contract held
+        self.scheduler.split_candidates = [
+            (p.prefill_units, p.decode_units) for p in self.rm.partitions]
+        # online estimator refit (§3.2.2 closed loop): refit=False pins
+        # the offline params; True/None builds a default OnlineRefitter;
+        # an OnlineRefitter instance is used as-is. Refits only happen
+        # when a driver feeds measured cycle durations through
+        # record_cycle_actual (the frontend's virtual replay does).
+        if refit is False:
+            self.refitter: Optional[OnlineRefitter] = None
+        elif isinstance(refit, OnlineRefitter):
+            self.refitter = refit
+        else:
+            self.refitter = OnlineRefitter(cfg, self.est)
+        self.refit_interval = refit_interval
+        self._obs_since_refit = 0
+        #: (kind, predicted, actual) per cycle with a recorded actual —
+        #: same shape as the simulator's pred_actual log. Bounded so a
+        #: long-running server can feed actuals forever without leaking
+        #: (~1.5 days at 1 cycle/ms); consumers needing slices should
+        #: ``list(...)`` it.
+        self.pred_actual: Deque[Tuple[str, float, float]] = deque(
+            maxlen=1 << 17)
+        #: observation indices at which a refit was applied (params swap
+        #: points, for before/after error attribution); positions are
+        #: counted from the first observation and stay aligned with
+        #: pred_actual until it wraps its maxlen
+        self.refit_log: List[int] = []
         if paged:
             # unified device page pool: PagedKVPool block ids address these
             # pages directly; the trailing trash page absorbs masked writes
@@ -382,6 +419,15 @@ class BulletServer:
 
     def _switch(self, resources) -> None:
         """Swap partitions, counting only actual re-configurations."""
+        if self.fused:
+            # the split search is defined over the prebuilt FusedExecutable
+            # table; a proposal not on it means scheduler and resource
+            # manager have drifted apart (nearest() would silently snap it,
+            # masking the bug — fail loudly instead)
+            assert self.rm.on_table(resources), (
+                f"scheduler proposed off-table partition "
+                f"({resources.prefill_units}, {resources.decode_units}); "
+                f"table quantum={self.rm.quantum}")
         before = self.rm.current.config_id
         part = self.rm.switch(resources)
         if part.config_id != before:
@@ -765,6 +811,66 @@ class BulletServer:
         self._prefill_group_done(task, now)
         return True
 
+    # -- online estimator refit (§3.2.2 closed loop) ----------------------
+    def last_cycle_observation(self) -> Optional[CycleObservation]:
+        """What the most recent step() executed, as the estimator-facing
+        CycleObservation — the record virtual-clock replay prices
+        (serving.frontend.estimator_cycle_cost) and the OnlineRefitter
+        fits against. None when the step ran no device work."""
+        w = self.last_decode
+        if w is None and not self.last_prefill_tokens:
+            return None
+        R = self.buffer.state.resources
+        if self.last_fused and w is not None and self.last_prefill_tokens:
+            return CycleObservation(
+                "fused", self.last_prefill_tokens,
+                max(R.prefill_units, 1), max(R.decode_units, 1),
+                max(w.batch, 1), max(w.mean_context, 1),
+                tuple(w.streamed) or None)
+        return CycleObservation(
+            "serial", self.last_prefill_tokens,
+            R.prefill_units, R.decode_units,
+            w.batch if w is not None else 0,
+            max(w.mean_context, 1) if w is not None else 1,
+            (tuple(w.streamed) or None) if w is not None else None)
+
+    def record_cycle_actual(self, actual_s: float) -> None:
+        """Feed the measured duration of the cycle the last step() ran.
+
+        Drivers that know real time call this once per step — the online
+        frontend does it on every virtual-clock replay cycle; a hardware
+        deployment would pass device wall time. Each call logs one
+        (kind, predicted, actual) pair and hands the observation to the
+        OnlineRefitter; nothing refits until the engine's refit interval
+        elapses inside step()."""
+        obs = self.last_cycle_observation()
+        if obs is None or actual_s <= 0:
+            return
+        pred = predict_cycle(self.est, self.cfg, obs)
+        self.pred_actual.append((obs.kind, pred, actual_s))
+        if self.refitter is not None:
+            self.refitter.observe(obs, actual_s)
+            self._obs_since_refit += 1
+
+    def _maybe_refit(self) -> None:
+        """Owned by step(): every ``refit_interval`` recorded cycles, ask
+        the refitter for better params and swap them into the engine AND
+        the scheduler via PerfEstimator.with_params — both must price
+        cycles with the same model, or split decisions and replay charges
+        diverge."""
+        if (self.refitter is None
+                or self._obs_since_refit < self.refit_interval):
+            return
+        self._obs_since_refit = 0
+        new = self.refitter.refit()
+        self.stats.refits_rejected = self.refitter.refits_rejected
+        if new is not None:
+            self.est = self.est.with_params(new)
+            self.scheduler.est = self.est
+            self.refitter.est = self.est
+            self.stats.refits += 1
+            self.refit_log.append(len(self.pred_actual))
+
     # -- main loop --------------------------------------------------------
     def step(self, now: float) -> bool:
         """One engine cycle at time ``now``: admit newly-pending prompts,
@@ -774,6 +880,7 @@ class BulletServer:
         otherwise. Returns True if any engine did work. Drive this from an
         online frontend (serving.frontend) or via :meth:`run` for offline
         batches."""
+        self._maybe_refit()
         self.last_prefill_tokens = 0
         self.last_decode = None
         self.last_fused = False

@@ -20,13 +20,37 @@ same fitting pipeline consumes wall-clock measurements.
 
 from __future__ import annotations
 
+import functools
 import math
+from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 
 from repro.configs.base import ModelConfig
 from repro.core import analytics as A
+
+
+# Cost accounting is pure in hashable args (ModelConfig is frozen), and the
+# refit loss / split search re-price the same cycles under many candidate
+# params — memoize the counts so only the Eq. 2 parameter math re-runs.
+_prefill_cost = functools.lru_cache(maxsize=4096)(A.prefill_cost)
+
+
+@functools.lru_cache(maxsize=4096)
+def _decode_cost(cfg: ModelConfig, batch: int, ctx: int,
+                 contexts: Optional[Tuple[int, ...]],
+                 page_size: Optional[int]):
+    return A.decode_cost(cfg, batch, ctx, contexts=contexts,
+                         page_size=page_size)
+
+
+def _decode_cost_any(cfg: ModelConfig, batch: int, ctx: int,
+                     contexts: Optional[Sequence[int]],
+                     page_size: Optional[int]):
+    return _decode_cost(cfg, batch, ctx,
+                        tuple(contexts) if contexts is not None else None,
+                        page_size)
 
 
 # ---------------------------------------------------------------------------
@@ -138,11 +162,20 @@ class PerfEstimator:
         # tiles of ~128x128x512 MACs as the Pallas grid granule
         return max(1, int(flops / (2 * 128 * 128 * 512)))
 
+    def colocated_compute_time(self, flops: float, u: float) -> float:
+        """Eq. 2's compute term for one co-located phase on partition
+        fraction ``u``: flops / (C·u·d_c(u)·p_c). Building block of
+        ``fused_cycle_time``'s t_c, exposed so the scheduler's split
+        tie-break prices compute imbalance with the same formula."""
+        C = self.hw.total_flops * self.params.sustained_compute
+        return flops / (C * max(u, 1e-3) * self.params.d_c(u)
+                        * self.params.p_c)
+
     # -- phase-level API used by scheduler & simulator ----------------
     def prefill_layer_time(self, cfg: ModelConfig, n_tokens: int,
                            ctx_start: int, units: int, *,
                            colocated: bool, oversub: float = 1.0) -> float:
-        c = A.prefill_cost(cfg, n_tokens, ctx_start, include_head=False)
+        c = _prefill_cost(cfg, n_tokens, ctx_start, include_head=False)
         per_layer = self.kernel_time(
             c.flops / cfg.n_layers, c.hbm_bytes / cfg.n_layers, units,
             colocated=colocated, oversub=oversub,
@@ -165,8 +198,7 @@ class PerfEstimator:
         summed per-slot live-context bytes (what the block-paged cache
         actually streams) instead of the ``batch × mean`` collapse;
         ``page_size`` adds the page-granularity round-up."""
-        c = A.decode_cost(cfg, batch, ctx, contexts=contexts,
-                          page_size=page_size)
+        c = _decode_cost_any(cfg, batch, ctx, contexts, page_size)
         if contexts is not None:
             batch = len(contexts)
         t = self.kernel_time(c.flops, c.hbm_bytes, units,
@@ -204,22 +236,20 @@ class PerfEstimator:
         U = self.hw.total_units
         u_p = max(1, min(prefill_units, U)) / U
         u_d = max(1, min(decode_units, U)) / U
-        C = self.hw.total_flops * self.params.sustained_compute
         B = self.hw.total_bw * self.params.sustained_bw
-        p_c, p_b = self.params.p_c, self.params.p_b
+        p_b = self.params.p_b
 
-        cp = A.prefill_cost(cfg, n_tokens, 0, include_head=False)
+        cp = _prefill_cost(cfg, n_tokens, 0, include_head=False)
         p_flops = cp.flops / cfg.n_layers * lg
         p_bytes = cp.hbm_bytes / cfg.n_layers * lg
-        cd = A.decode_cost(cfg, batch, max(ctx, 1), contexts=contexts,
-                           page_size=page_size)
+        cd = _decode_cost_any(cfg, batch, max(ctx, 1), contexts, page_size)
         if contexts is not None:
             batch = len(contexts)
 
         # compute side: concurrent on disjoint slot shares -> max of the
         # phases' partitioned Eq. 2 compute terms
-        t_c = max(p_flops / (C * u_p * self.params.d_c(u_p) * p_c),
-                  cd.flops / (C * u_d * self.params.d_c(u_d) * p_c))
+        t_c = max(self.colocated_compute_time(p_flops, u_p),
+                  self.colocated_compute_time(cd.flops, u_d))
         # bandwidth side: one shared pipe -> the phases' bytes sum
         t_b = (p_bytes + cd.hbm_bytes) / (B * p_b)
         g_p = max(1, math.ceil(n_tokens / 128) * max(cfg.n_heads, 1))
@@ -311,10 +341,31 @@ class PerfEstimator:
 
     # -- online feedback (§3.3.2: predicted-vs-observed correction) ---
     def _fb(self, key: str) -> float:
+        """Multiplicative residual correction for one cycle kind.
+
+        Every phase-level prediction is scaled by the feedback factor of
+        its kind (``"prefill"``, ``"decode"``, ``"fused"``, ``"lockstep"``);
+        1.0 (no entry) means no correction. This is the *cheap* half of the
+        §3.3.2 loop — a scalar EMA that absorbs uniform model bias per
+        kind. The *structural* half is :class:`OnlineRefitter`, which
+        re-solves the Eq. 2 parameters themselves; the two should not run
+        on the same observations (the refitter would chase a moving
+        target), so the engine's refit path leaves ``feedback`` untouched.
+        """
         return self.feedback.get(key, 1.0)
 
     def observe(self, key: str, predicted: float, actual: float,
                 ema: float = 0.3):
+        """Fold one predicted-vs-actual pair into the ``key`` feedback EMA.
+
+        The stored factor converges to the steady-state actual/predicted
+        ratio (each update multiplies the previous factor by the observed
+        ratio, smoothed by ``ema``), so a consistently 2x-slow kind ends up
+        charged 2x. Use this when only a scalar bias correction is wanted
+        — e.g. static params pinned via ``BulletServer(refit=False)`` (see
+        docs/TUNING.md); :class:`OnlineRefitter` supersedes it when live
+        refitting is enabled.
+        """
         if predicted <= 0 or actual <= 0:
             return
         ratio = actual / predicted
@@ -322,6 +373,12 @@ class PerfEstimator:
         self.feedback[key] = (1 - ema) * prev + ema * prev * ratio
 
     def with_params(self, params: EstimatorParams) -> "PerfEstimator":
+        """A new estimator with ``params`` swapped in (same hardware,
+        feedback copied). This is the refit hand-over point: the engine
+        replaces its own and its scheduler's estimator reference with the
+        returned object, so in-flight predictions keep the old params and
+        every later scheduling cycle sees the refit ones — no estimator is
+        ever mutated mid-decision."""
         return PerfEstimator(self.hw, params, dict(self.feedback))
 
 
@@ -335,6 +392,48 @@ class ProfileSample:
     dm: int          # units allocated to decode
     t_prefill: float
     t_decode: float
+
+
+#: fit/refit search space: the 6 Eq. 2 parameters with physical bounds
+#: (alpha_c >= 1: compute scales sub-linearly with the partition; alpha_b
+#: <= 1: bandwidth super-linearly; p/sustained are fractions of peak).
+#: Shared by the offline fit_params sweep and the OnlineRefitter.
+PARAM_FIELDS = ("alpha_c", "alpha_b", "p_c", "p_b",
+                "sustained_compute", "sustained_bw")
+PARAM_BOUNDS = {"alpha_c": (1.0, 1.6), "alpha_b": (0.5, 1.0),
+                "p_c": (0.5, 1.0), "p_b": (0.5, 1.0),
+                "sustained_compute": (0.4, 1.0), "sustained_bw": (0.4, 1.0)}
+
+
+def _coordinate_descent(loss, start: EstimatorParams, *, iters: int,
+                        fields: Sequence[str] = PARAM_FIELDS,
+                        step0: float = 0.1,
+                        clamp=None) -> Tuple[EstimatorParams, float]:
+    """Shared fit/refit solver: greedy per-field moves with halving steps.
+    ``clamp(field, value)`` optionally restricts each candidate further
+    (the refitter's per-refit movement bound)."""
+    cur = start
+    cur_loss = loss(cur)
+    step = {f: step0 for f in fields}
+    for _ in range(iters):
+        improved = False
+        for f in fields:
+            for sgn in (+1, -1):
+                lo, hi = PARAM_BOUNDS[f]
+                cand_v = min(hi, max(lo, getattr(cur, f) + sgn * step[f]))
+                if clamp is not None:
+                    cand_v = clamp(f, cand_v)
+                cand = replace(cur, **{f: cand_v})
+                l2 = loss(cand)
+                if l2 < cur_loss - 1e-9:
+                    cur, cur_loss = cand, l2
+                    improved = True
+        if not improved:
+            for f in fields:
+                step[f] *= 0.5
+            if max(step.values()) < 1e-3:
+                break
+    return cur, cur_loss
 
 
 def fit_params(samples: List[ProfileSample], cfg: ModelConfig,
@@ -360,28 +459,142 @@ def fit_params(samples: List[ProfileSample], cfg: ModelConfig,
                 n += 1
         return err / max(n, 1)
 
-    fields = ["alpha_c", "alpha_b", "p_c", "p_b",
-              "sustained_compute", "sustained_bw"]
-    bounds = {"alpha_c": (1.0, 1.6), "alpha_b": (0.5, 1.0),
-              "p_c": (0.5, 1.0), "p_b": (0.5, 1.0),
-              "sustained_compute": (0.4, 1.0), "sustained_bw": (0.4, 1.0)}
-    cur = base
-    cur_loss = loss(cur)
-    step = {f: 0.1 for f in fields}
-    for _ in range(iters):
-        improved = False
-        for f in fields:
-            for sgn in (+1, -1):
-                lo, hi = bounds[f]
-                cand_v = min(hi, max(lo, getattr(cur, f) + sgn * step[f]))
-                cand = replace(cur, **{f: cand_v})
-                l2 = loss(cand)
-                if l2 < cur_loss - 1e-9:
-                    cur, cur_loss = cand, l2
-                    improved = True
-        if not improved:
-            for f in fields:
-                step[f] *= 0.5
-            if max(step.values()) < 1e-3:
-                break
+    cur, _ = _coordinate_descent(loss, base, iters=iters)
     return cur
+
+
+# ---------------------------------------------------------------------------
+# Online refit (closing the §3.2.2 loop on live serving cycles)
+# ---------------------------------------------------------------------------
+
+class CycleObservation(NamedTuple):
+    """What one engine cycle executed — enough to re-predict its duration
+    under *any* candidate ``EstimatorParams`` (the refit loss re-evaluates
+    the whole window per candidate, so features, not predictions, are
+    stored).
+
+    ``kind`` selects the charging model: ``"fused"`` cycles are charged
+    Eq. 2's co-located max (``fused_cycle_time``), ``"serial"`` cycles the
+    full-machine sum of their dispatches (``serial_cycle_time``).
+    ``contexts`` carries the per-slot KV tokens the decode side actually
+    streamed (page-bucketed), exactly what virtual-clock replay charges.
+    """
+    kind: str                             # "fused" | "serial"
+    n_tokens: int                         # prefill tokens this cycle (0 = none)
+    prefill_units: int
+    decode_units: int
+    batch: int                            # decode slots that ran (0 = none)
+    ctx: int                              # mean live context of the batch
+    contexts: Optional[Tuple[int, ...]] = None   # streamed KV tokens per slot
+    layer_group: Optional[int] = None     # layers launched (None = pattern)
+
+
+def predict_cycle(est: PerfEstimator, cfg: ModelConfig,
+                  obs: CycleObservation) -> float:
+    """Predicted duration (s) of ``obs`` under ``est`` — the single
+    charging rule shared by virtual-clock replay, the refit loss, and the
+    surrogate oracle, so all three always price the same cycle the same
+    way (refit-consistent replay costs)."""
+    if obs.kind == "fused":
+        return est.fused_cycle_time(
+            cfg, obs.n_tokens, max(obs.prefill_units, 1),
+            max(obs.decode_units, 1), max(obs.batch, 1), max(obs.ctx, 1),
+            contexts=obs.contexts, layer_group=obs.layer_group)
+    return est.serial_cycle_time(
+        cfg, obs.n_tokens, obs.batch, max(obs.ctx, 1),
+        contexts=obs.contexts, layer_group=obs.layer_group)
+
+
+class OnlineRefitter:
+    """Sliding-window re-fit of the Eq. 2 parameters from live cycles.
+
+    The offline profile fit (§3.2.2) happens once, on surrogate or
+    pre-deployment measurements; under real traffic the contention terms
+    drift (co-location mixes, page-bucketed KV traffic, thermal/SMEM
+    effects the sweep never saw). The refitter closes the loop:
+
+    1. ``observe(obs, actual)`` appends one executed cycle and its
+       measured duration to a bounded window (``window`` cycles,
+       newest-wins).
+    2. ``refit()`` — called by the engine every ``refit_interval`` cycles
+       — re-solves the parameters by the same coordinate-descent
+       log-least-squares ``fit_params`` uses, but over the live window,
+       warm-started from the current params.
+
+    Three guards keep a few noisy cycles from destabilizing serving (see
+    docs/TUNING.md for how to size them):
+
+    - **min_samples** — no refit until the window holds enough cycles to
+      constrain all six parameters.
+    - **hysteresis** (``improve_tol``) — the candidate params are adopted
+      only if they cut the window loss by more than this relative margin;
+      pure measurement noise (whose optimum hovers near the current
+      params) is rejected and the params hold still.
+    - **step clamp** (``max_step``) — each accepted refit may move a
+      parameter at most this far from its current value, so even a
+      pathological window (e.g. a burst of preemption-mangled cycles)
+      only nudges the model, and sustained drift is absorbed over several
+      refits. PARAM_BOUNDS applies on top, as in the offline fit.
+
+    The refitter never mutates the estimator it reads: the engine swaps
+    the returned params in via :meth:`PerfEstimator.with_params`.
+    """
+
+    def __init__(self, cfg: ModelConfig, est: PerfEstimator, *,
+                 window: int = 192, min_samples: int = 24,
+                 improve_tol: float = 0.05, max_step: float = 0.2,
+                 min_loss: float = 4e-3, iters: int = 12):
+        self.cfg = cfg
+        self.est = est
+        self.window: Deque[Tuple[CycleObservation, float]] = deque(
+            maxlen=window)
+        self.min_samples = min_samples
+        self.improve_tol = improve_tol
+        self.max_step = max_step
+        #: measurement-noise floor: when the window's mean squared log
+        #: error is already below this, hold the params and skip the
+        #: search entirely (4e-3 ~= the 6% lognormal noise of the
+        #: surrogate profiler; raise it for noisier hardware clocks)
+        self.min_loss = min_loss
+        self.iters = iters
+        self.refits_applied = 0
+        self.refits_rejected = 0
+        self.last_loss: Optional[float] = None
+
+    def observe(self, obs: CycleObservation, actual: float) -> None:
+        """Record one executed cycle and its measured duration (s)."""
+        if actual > 0 and (obs.n_tokens > 0 or obs.batch > 0):
+            self.window.append((obs, actual))
+
+    def _loss(self, params: EstimatorParams) -> float:
+        e = self.est.with_params(params)
+        err = 0.0
+        for obs, actual in self.window:
+            pred = predict_cycle(e, self.cfg, obs)
+            if pred > 0:
+                err += (math.log(pred) - math.log(actual)) ** 2
+        return err / max(len(self.window), 1)
+
+    def refit(self) -> Optional[EstimatorParams]:
+        """Re-solve the params on the current window; returns the new
+        params iff they beat the current ones by the hysteresis margin,
+        else None (caller keeps serving on the old params)."""
+        if len(self.window) < self.min_samples:
+            return None
+        cur = self.est.params
+        cur_loss = self._loss(cur)
+        self.last_loss = cur_loss
+        if cur_loss < self.min_loss:   # at the noise floor: hold
+            return None
+
+        def clamp(f: str, v: float) -> float:
+            c = getattr(cur, f)
+            return min(c + self.max_step, max(c - self.max_step, v))
+
+        cand, cand_loss = _coordinate_descent(
+            self._loss, cur, iters=self.iters, step0=0.05, clamp=clamp)
+        if cand_loss < (1.0 - self.improve_tol) * cur_loss:
+            self.refits_applied += 1
+            return cand
+        self.refits_rejected += 1
+        return None

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.estimator import (EstimatorParams, HardwareSpec,
-                                  PerfEstimator, ProfileSample)
+                                  PerfEstimator, ProfileSample,
+                                  predict_cycle)
 
 #: Hidden ground truth the surrogate machine uses (deliberately different
 #: from EstimatorParams defaults so the fit has something to recover).
@@ -59,6 +60,15 @@ class SurrogateMachine:
                        *, colocated: bool, oversub: float = 1.0) -> float:
         return self._noisy(self._est.decode_iter_time(
             cfg, bs, cl, units, colocated=colocated, oversub=oversub))
+
+    def measure_cycle(self, cfg: ModelConfig, obs) -> float:
+        """Ground-truth duration of one engine cycle (a
+        ``CycleObservation``): the shared predict_cycle charging rule
+        evaluated under the surrogate's hidden parameters, plus
+        measurement noise. This is the oracle behind refit benchmarks —
+        the engine predicts with its fitted params, "reality" runs on
+        these."""
+        return self._noisy(predict_cycle(self._est, cfg, obs))
 
 
 def run_profiling(cfg: ModelConfig, hw: HardwareSpec, *,

@@ -69,6 +69,14 @@ class ResourceManager:
             for p in self.partitions:
                 self._exec[p.config_id] = builder(p)
 
+    def on_table(self, res: ResourceStatus) -> bool:
+        """Is (prefill_units, decode_units) exactly a pre-built partition?
+        The engine asserts this for every fused-mode Decision: the split
+        search must only propose execution states that exist, with
+        ``nearest()`` reserved for callers that legitimately quantize
+        (the simulator, serial mode)."""
+        return (res.prefill_units, res.decode_units) in self._by_units
+
     def nearest(self, res: ResourceStatus) -> PartitionConfig:
         """Quantize an arbitrary (u, v) request onto the partition table.
 

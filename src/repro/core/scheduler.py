@@ -24,6 +24,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.core import analytics as A
 from repro.core.estimator import PerfEstimator
 from repro.core.metadata import SystemState, ResourceStatus
 from repro.serving.request import SLO, percentile
@@ -31,24 +32,41 @@ from repro.serving.request import SLO, percentile
 
 @dataclass
 class SchedulerConfig:
-    unit_quantum: int = 2            # allocation granularity (2 SMs / 2 units)
-    min_decode_units: int = 2        # v_min
+    """Knobs of the Algorithm 1/2 search (see docs/TUNING.md)."""
+    #: allocation granularity in resource units — the libsmctrl 2-SM
+    #: analogue; every proposed split is a multiple of this, matching the
+    #: quantum the ResourceManager pre-built its partition table with
+    unit_quantum: int = 2
+    #: v_min / u_min: neither phase is starved below this many units while
+    #: it has work (the §3.3.3 pause is the only exception)
+    min_decode_units: int = 2
     min_prefill_units: int = 2
-    layer_group: int = 1             # layers launched per scheduling cycle
+    #: layers launched per scheduling cycle — the granularity at which the
+    #: prefill engine yields back to the scheduler (one pattern-repeat
+    #: group in the real engine)
+    layer_group: int = 1
+    #: percentile over per-request latency projections used for the
+    #: violation checks (p90 in the paper's SLO-attainment definition)
     p_quantile: float = 90.0
-    max_decode_pause_cycles: int = 48  # bound decode starvation (W_max)
+    #: bound decode starvation under repeated §3.3.3 borrows (W_max)
+    max_decode_pause_cycles: int = 48
     #: fraction of the TPOT SLO the search targets — headroom so that
     #: transiently slow iterations cannot poison the cumulative per-request
     #: TPOT (the paper's "estimating delays each step to prevent future
     #: violations")
     tpot_margin: float = 0.6
+    #: same headroom for the (normalized) TTFT violation check
     ttft_margin: float = 0.8
     #: execution mode the estimates must match: True (fused spatial
     #: co-execution) applies Eq. 2's p_c/p_b contention whenever both
     #: phases are resident; False (serial temporal dispatches) never
     #: does — the phases time-share the whole device instead of
     #: contending for partitions. BulletServer wires this to its own
-    #: fused/serial mode.
+    #: fused/serial mode. When the scheduler is additionally given the
+    #: engine's prebuilt partition table (``split_candidates``), fused
+    #: mode switches the split search itself to the fused objective:
+    #: minimize predicted ``fused_cycle_time`` over exactly the table's
+    #: PartitionConfigs (docs/PERF_MODEL.md).
     fused: bool = True
 
 
@@ -64,12 +82,21 @@ class SLOScheduler:
     """Decentralized scheduler instance (one per engine, sharing state)."""
 
     def __init__(self, cfg: ModelConfig, est: PerfEstimator, slo: SLO,
-                 sched: SchedulerConfig = SchedulerConfig()):
+                 sched: SchedulerConfig = SchedulerConfig(),
+                 split_candidates: Optional[List[Tuple[int, int]]] = None):
         self.cfg = cfg
         self.est = est
         self.slo = slo
         self.sc = sched
         self.decode_paused_cycles = 0
+        #: the engine's prebuilt partition table [(prefill_units,
+        #: decode_units), ...] (one FusedExecutable each). When set, every
+        #: Decision is snapped onto it — the split search can only propose
+        #: partitions that actually exist as execution states — and fused
+        #: mode searches them under the fused-cycle objective. None (e.g.
+        #: the discrete-event simulator, which has no executable table)
+        #: keeps the quantized per-phase Algorithm 2 search.
+        self.split_candidates = split_candidates
 
     # -- progress tracking (Algorithm 1 lines 2-10) -------------------
     def estimate_ttfts(self, state: SystemState, now: float,
@@ -118,6 +145,86 @@ class SLOScheduler:
         q = self.sc.unit_quantum
         return max(q, (units // q) * q)
 
+    def _snap_to_table(self, res: ResourceStatus) -> ResourceStatus:
+        """Snap a proposed (u, v) onto the engine's prebuilt partition
+        table (mirror of ResourceManager.nearest): the scheduler must
+        never hand the engine a split it has no executable for — e.g.
+        prefill-only on a table whose total_units is not a multiple of
+        the quantum."""
+        if not self.split_candidates:
+            return res
+        u, v = min(self.split_candidates,
+                   key=lambda c: abs(c[0] - res.prefill_units))
+        return ResourceStatus(u, v)
+
+    def _fused_candidates(self, total: int) -> List[Tuple[int, int]]:
+        """Both-phases-resident splits of the prebuilt table (extremes
+        excluded by the v_min/u_min floors)."""
+        return [(u, v) for u, v in self.split_candidates
+                if u + v == total and u >= self.sc.min_prefill_units
+                and v >= self.sc.min_decode_units]
+
+    def _fused_search_applicable(self, state: SystemState,
+                                 total: int) -> bool:
+        """One gate for both Algorithm 1 branches: the fused-cycle
+        objective applies when the scheduler drives the fused engine
+        (sc.fused + a prebuilt table), both phases are resident, and the
+        table offers at least one both-phases split."""
+        return bool(self.sc.fused and self.split_candidates
+                    and state.decode.n_d > 0 and state.prefill.n_tokens > 0
+                    and self._fused_candidates(total))
+
+    def _fused_cycle_ms(self, state: SystemState, u: int, v: int) -> float:
+        """Predicted duration of one fused engine cycle under split
+        (u, v) — also the decode batch's per-token cadence, since a fused
+        cycle emits one token per running slot."""
+        P, D = state.prefill, state.decode
+        lg = self.sc.layer_group * len(self.cfg.pattern)
+        return 1e3 * self.est.fused_cycle_time(
+            self.cfg, max(P.n_tokens, 1), max(u, 1), max(v, 1),
+            max(D.n_d, 1), max(int(D.context), 1), layer_group=lg)
+
+    def _fused_split_search(self, state: SystemState, total: int,
+                            target_tpot_ms: float
+                            ) -> Tuple[int, int, float]:
+        """Fused-objective Algorithm 2: pick the table split minimizing
+        the predicted fused cycle time, subject to the TPOT gate (cycle
+        time IS the fused TPOT, so the gate is directly on the objective;
+        the TTFT side needs no separate gate — minimizing the cycle also
+        maximizes prefill progress per cycle, and the §3.3.3 pause branch
+        remains the escalation when no co-run split can rescue TTFT).
+
+        Ties (the shared-HBM-pipe regime, where Eq. 2's bandwidth term is
+        split-independent) break toward the lower compute-side imbalance,
+        then toward more decode units. Returns (u, v, cycle_ms).
+        """
+        P, D = state.prefill, state.decode
+        lg = self.sc.layer_group * len(self.cfg.pattern)
+        U = self.est.hw.total_units
+        p_flops = (A.prefill_cost(self.cfg, max(P.n_tokens, 1), 0,
+                                  include_head=False).flops
+                   / self.cfg.n_layers * lg)
+        d_flops = A.decode_cost(self.cfg, max(D.n_d, 1),
+                                max(int(D.context), 1)).flops
+        gated = ungated = None            # (t_ms, t_c, -v, u, v)
+        for u, v in self._fused_candidates(total):
+            t_ms = self._fused_cycle_ms(state, u, v)
+            # compute-side imbalance, for tie-breaking only: both phases'
+            # partitioned Eq. 2 compute terms under this split (same
+            # formula fused_cycle_time's t_c uses)
+            t_c = max(
+                self.est.colocated_compute_time(p_flops, max(u, 1) / U),
+                self.est.colocated_compute_time(d_flops, max(v, 1) / U))
+            key = (t_ms, t_c, -v, u, v)
+            if ungated is None or key < ungated:
+                ungated = key
+            if t_ms <= target_tpot_ms and (gated is None or key < gated):
+                gated = key
+        best = gated if gated is not None else ungated
+        # no candidate meets the gate: minimizing the cycle still
+        # minimizes the fused TPOT, so the argmin is the best rescue
+        return best[3], best[4], best[0]
+
     def _pause_ok(self, state: SystemState, dt_pause: float) -> bool:
         """Is delaying decode by ``dt_pause`` seconds safe for every
         in-flight request's *cumulative* TPOT (§3.3.3 borrow)?"""
@@ -134,30 +241,51 @@ class SLOScheduler:
         """Shift units decode→prefill while the *predicted* TPOT stays under
         tpot_margin·SLO (Algorithm 2's step-wise search, v → v_min); in the
         TTFT-violated branch, if v_min still cannot rescue TTFT while TPOT
-        has slack, temporarily pause decode (§3.3.3 "borrow")."""
+        has slack, temporarily pause decode (§3.3.3 "borrow").
+
+        With the fused engine (``sc.fused`` + a prebuilt partition table)
+        and both phases resident, the search objective is the predicted
+        ``fused_cycle_time`` over the table's splits instead of the
+        per-phase prefill-group time — the partition the engine actually
+        runs is one fused dispatch, so per-phase times are fiction there.
+        """
         target = self.sc.tpot_margin * self.slo.tpot_ms
         n_tok = max(state.prefill.n_tokens, 1)
         colocated = self.sc.fused and state.decode.n_d > 0
 
-        # Algorithm 2: walk candidate splits, *estimating* both phases at
-        # each step — maximizing prefill units is NOT monotone in prefill
-        # speed because of Eq. 1 tail waves (tile count vs. slot count).
-        best_v, best_t = None, float("inf")
-        v = self.sc.min_decode_units
-        while v <= total - self.sc.min_prefill_units:
-            if (not state.decode.n_d or
-                    self.predicted_tpot_ms(state, v) <= target):
-                t_p = self.est.prefill_layer_time(
-                    self.cfg, n_tok, 0, total - v, colocated=colocated)
-                # prefer more decode units at equal prefill speed
-                if t_p < best_t * 0.999 or (abs(t_p - best_t) <= best_t * 1e-3
-                                            and best_v is not None and v > best_v):
-                    best_v, best_t = v, min(t_p, best_t)
-            v += self.sc.unit_quantum
-        if best_v is None:          # no split satisfies TPOT: give decode all
-            best_v = total - self.sc.min_prefill_units
-        v = self._quantize(best_v)
-        u = total - v
+        if self._fused_search_applicable(state, total):
+            u, v, _ = self._fused_split_search(state, total, target)
+            # §3.3.3 gate preserved: the exclusive-gain comparison below
+            # keeps its per-phase semantics — the best prefill-group time
+            # any co-run split could offer (what the serial-objective
+            # search used as best_t) vs. exclusive. Using the fused-chosen
+            # split (or the whole cycle time, which includes decode's
+            # share) would inflate the "gain" and turn the proactive
+            # borrow into a constant pause, starving the fused path.
+            best_t = min(self.est.prefill_layer_time(
+                self.cfg, n_tok, 0, cu, colocated=colocated)
+                for cu, _cv in self._fused_candidates(total))
+        else:
+            # Algorithm 2: walk candidate splits, *estimating* both phases
+            # at each step — maximizing prefill units is NOT monotone in
+            # prefill speed because of Eq. 1 tail waves (tile count vs.
+            # slot count).
+            best_v, best_t = None, float("inf")
+            v = self.sc.min_decode_units
+            while v <= total - self.sc.min_prefill_units:
+                if (not state.decode.n_d or
+                        self.predicted_tpot_ms(state, v) <= target):
+                    t_p = self.est.prefill_layer_time(
+                        self.cfg, n_tok, 0, total - v, colocated=colocated)
+                    # prefer more decode units at equal prefill speed
+                    if t_p < best_t * 0.999 or (abs(t_p - best_t) <= best_t * 1e-3
+                                                and best_v is not None and v > best_v):
+                        best_v, best_t = v, min(t_p, best_t)
+                v += self.sc.unit_quantum
+            if best_v is None:      # no split satisfies TPOT: give decode all
+                best_v = total - self.sc.min_prefill_units
+            v = self._quantize(best_v)
+            u = total - v
 
         # §3.3.3 borrow: while a prefill is resident, running it exclusively
         # (no contention, full units) beats any co-run split as long as the
@@ -187,8 +315,17 @@ class SLOScheduler:
         return Decision(ResourceStatus(u, total - u), reason="reduce_prefill")
 
     def _balanced(self, state: SystemState, total: int) -> Decision:
-        """Split proportionally to estimated phase demand (both violated)."""
+        """Both SLOs violated. Serial model: split proportionally to
+        estimated phase demand. Fused engine: every split runs as one
+        cycle anyway, so the only lever is the cycle time itself —
+        minimize predicted ``fused_cycle_time`` over the table, gated at
+        the full (margin-free) TPOT SLO since the margin headroom is
+        already gone."""
         P, D = state.prefill, state.decode
+        if self._fused_search_applicable(state, total):
+            u, v, _ = self._fused_split_search(state, total,
+                                               self.slo.tpot_ms)
+            return Decision(ResourceStatus(u, v), reason="balanced")
         t_p = self.est.prefill_time(self.cfg, max(P.n_tokens, 1), total,
                                     colocated=self.sc.fused)
         t_d = self.est.decode_iter_time(self.cfg, max(D.n_d, 1),
@@ -249,4 +386,6 @@ class SLOScheduler:
         if state.decode.n_d == 0 and not d.pause_decode:
             d = Decision(ResourceStatus(total, 0), reorder=order,
                          reason="prefill_only")
+        # every decision the engine sees must name a prebuilt partition
+        d.resources = self._snap_to_table(d.resources)
         return d

@@ -39,7 +39,7 @@ _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
 _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s+->")
 _CALL_ATTR_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
-_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
 

@@ -60,9 +60,11 @@ def _replay(args):
     from repro.configs import get_config
     from repro.core.engine import BulletServer
     from repro.core.estimator import HardwareSpec, PerfEstimator
+    from repro.core.profiler import SurrogateMachine
     from repro.models import init_params
     from repro.serving.frontend import (OnlineFrontend, VirtualClock,
-                                        WallClock, estimator_cycle_cost)
+                                        WallClock, estimator_cycle_cost,
+                                        oracle_cycle_cost)
     from repro.serving.request import WORKLOAD_SLOS
     from repro.serving.workload import fit_trace_to_context, generate_trace
 
@@ -76,14 +78,20 @@ def _replay(args):
     # benchmarks/replay_vs_sim.py holds both sides identical)
     est = PerfEstimator(HardwareSpec(n_chips=args.chips))
     server = BulletServer(cfg, params, slo=slo, est=est,
-                          max_slots=args.slots, max_len=args.max_len)
+                          max_slots=args.slots, max_len=args.max_len,
+                          refit=not args.no_refit)
     trace = fit_trace_to_context(
         generate_trace(args.dataset, args.rate, args.duration,
                        seed=args.seed, max_requests=args.requests),
         args.max_len)
     if args.clock == "virtual":
         clock = VirtualClock()
-        fe = OnlineFrontend(server, clock, cycle_cost=estimator_cycle_cost)
+        # --oracle replays against the surrogate machine's hidden-truth
+        # timings instead of the engine's own estimate: predicted-vs-actual
+        # error becomes non-trivial and the OnlineRefitter closes the loop
+        cost = (oracle_cycle_cost(SurrogateMachine(est.hw, seed=args.seed))
+                if args.oracle else estimator_cycle_cost)
+        fe = OnlineFrontend(server, clock, cycle_cost=cost)
     else:
         fe = OnlineFrontend(server, WallClock(speed=args.time_scale))
     if args.stream:
@@ -98,6 +106,11 @@ def _replay(args):
               "metrics cover the completed subset only")
     print(m.row())
     print(f"stats: {server.stats}")
+    if server.pred_actual:
+        rel = [abs(p / a - 1.0) for _, p, a in server.pred_actual if a > 0]
+        print(f"estimator: {len(rel)} cycles observed, mean |pred/actual-1| "
+              f"= {sum(rel) / len(rel):.3f}, refits applied "
+              f"= {server.stats.refits}")
     print("KV pool clean:", server.pool.free_blocks == server.pool.n_blocks)
 
 
@@ -149,7 +162,17 @@ def main():
                          "wall second)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they stream back (replay mode)")
+    ap.add_argument("--no-refit", action="store_true",
+                    help="pin the estimator's offline params (disable the "
+                         "online refit loop; see docs/TUNING.md)")
+    ap.add_argument("--oracle", action="store_true",
+                    help="virtual replay advances on the hidden-truth "
+                         "surrogate timings instead of the engine's own "
+                         "estimate (demonstrates the refit loop)")
     args = ap.parse_args()
+    if args.oracle and args.clock != "virtual":
+        ap.error("--oracle replays on surrogate-truth timings, which only "
+                 "the virtual clock can advance on; use --clock virtual")
     if args.mode == "dryrun":
         from subprocess import run
         code = 0

@@ -28,6 +28,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.engine import BulletServer
+from repro.core.estimator import predict_cycle
+from repro.core.profiler import SurrogateMachine
 from repro.serving.request import Request, ServingMetrics
 
 
@@ -69,33 +71,39 @@ class VirtualClock:
 def estimator_cycle_cost(server: BulletServer) -> float:
     """Predicted duration of the engine cycle that just ran.
 
-    Reads the engine's last_prefill_tokens / last_decode / last_fused
-    record of what step() actually executed, and charges it the way it
-    ran: a **fused** cycle costs the paper's Eq. 2 co-located
-    ``max(prefill, decode)/(1-s)`` — each phase on its partition's units
-    with p_c/p_b contention — while a **serial** cycle costs the SUM of
-    its dispatches, each alone on the full machine (temporal sharing has
-    no partition and no contention, but pays both phases back-to-back).
-    The decode charge uses the KV bytes the iteration actually streamed,
-    recorded per slot (bucketed live pages / dense ``max_len`` rows).
-    Lets a VirtualClock replay advance on the same PerfEstimator timeline
-    the simulator runs on."""
-    est, cfg = server.est, server.cfg
-    R = server.buffer.state.resources
-    w = server.last_decode
-    if server.last_fused and w is not None and server.last_prefill_tokens:
-        dt = est.fused_cycle_time(
-            cfg, server.last_prefill_tokens,
-            max(R.prefill_units, 1), max(R.decode_units, 1),
-            max(w.batch, 1), max(w.mean_context, 1),
-            contexts=w.streamed or None)
-        return dt if dt > 0 else 1e-4
-    dt = est.serial_cycle_time(
-        cfg, server.last_prefill_tokens,
-        w.batch if w is not None else 0,
-        max(w.mean_context, 1) if w is not None else 1,
-        contexts=(w.streamed or None) if w is not None else None)
+    Reads the engine's ``last_cycle_observation()`` record of what step()
+    actually executed and prices it through the shared
+    :func:`repro.core.estimator.predict_cycle` rule: a **fused** cycle
+    costs the paper's Eq. 2 co-located ``max(prefill, decode)/(1-s)``
+    with p_c/p_b contention, a **serial** cycle the SUM of its
+    full-machine dispatches, with the decode charge on the KV bytes the
+    iteration actually streamed (see docs/PERF_MODEL.md). Because the
+    price is read off ``server.est`` *at call time*, replay charges stay
+    refit-consistent: the cycle after an OnlineRefitter swap is already
+    priced with the refit params."""
+    obs = server.last_cycle_observation()
+    if obs is None:
+        return 1e-4
+    dt = predict_cycle(server.est, server.cfg, obs)
     return dt if dt > 0 else 1e-4
+
+
+def oracle_cycle_cost(truth: SurrogateMachine
+                      ) -> Callable[[BulletServer], float]:
+    """Cycle-cost callable that charges the *surrogate machine's* noisy
+    ground-truth duration for the cycle that just ran, instead of the
+    engine's own estimate. Virtual-clock replay then advances on "real"
+    time while the engine schedules with its (possibly stale) fitted
+    params — the drift regime the OnlineRefitter exists to close; the
+    frontend feeds each charged duration back to the engine as the
+    cycle's measured actual."""
+    def cost(server: BulletServer) -> float:
+        obs = server.last_cycle_observation()
+        if obs is None:
+            return 1e-4
+        dt = truth.measure_cycle(server.cfg, obs)
+        return dt if dt > 0 else 1e-4
+    return cost
 
 
 class OnlineFrontend:
@@ -163,8 +171,16 @@ class OnlineFrontend:
                 self.admitted_order.append(req.rid)
             did = self.server.step(now)
             if isinstance(self.clock, VirtualClock):
-                self.clock.advance(self.cycle_cost(self.server)
-                                   if self.cycle_cost else None)
+                dt = (self.cycle_cost(self.server)
+                      if self.cycle_cost else None)
+                self.clock.advance(dt)
+                if dt is not None:
+                    # the replay's advance IS the cycle's elapsed trace
+                    # time: feed it back as the measured actual (§3.2.2
+                    # feedback). Self-charged replays observe pred==actual
+                    # and the refitter holds still; an oracle_cycle_cost
+                    # replay observes real drift and the refit loop closes.
+                    self.server.record_cycle_actual(dt)
             if not did and self.server.idle:
                 if i < len(self._queue):        # idle gap: next arrival
                     self.clock.sleep_until(self._queue[i][0].arrival)
