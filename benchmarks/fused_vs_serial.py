@@ -46,6 +46,11 @@ MIXED = (4096, 16, 1024)  # the headline mixed-occupancy point
 
 JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / \
     "BENCH_fused_vs_serial.json"
+SUBMESH_JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_submesh.json"
+
+#: chip splits of the modeled 4-chip group for the sub-mesh sweep
+CHIP_SPLITS = ((1, 3), (2, 2), (3, 1))
 
 
 def _modeled_rows(emit):
@@ -131,6 +136,117 @@ def _replay(emit):
     return out, identical
 
 
+def _submesh_rows(emit):
+    """Chip-split sweep (docs/PARTITIONS.md): for each occupancy mix, the
+    best chip-granular cycle — disjoint sub-meshes, no co-location
+    contention, amortized KV handoff at ici_bw — against the best
+    tile-granular fused cycle. The per-row winner is the scheduler's
+    combined-table argmin: disaggregation-vs-sharing as data. Two
+    parameter regimes: the fitted defaults (mild contention — sharing's
+    shared HBM pipe wins everywhere) and a contended machine (p = 0.7,
+    the regime refits converge to under hot co-location mixes), where the
+    frontier splits — chip takes the decode-swamped mixes, tile keeps
+    the prefill-heavy ones."""
+    from repro.core.estimator import EstimatorParams
+
+    cfg = get_config("qwen3-1.7b")
+    rows = []
+    emit("# submesh: regime,n_tok,batch,ctx,tile_ms,chip_ms,chip_split,"
+         "handoff_ms,winner")
+    for regime, params in (("fitted", EstimatorParams()),
+                           ("contended", EstimatorParams(p_c=0.7, p_b=0.7))):
+        est = PerfEstimator(params=params)
+        U = est.hw.total_units
+        n_chips = est.hw.n_chips
+        for n_tok, batch, ctx in SWEEP:
+            tile = min(est.fused_cycle_time(cfg, n_tok, u, U - u, batch,
+                                            ctx)
+                       for u in range(2, U, 2))
+            # one handoff per task, amortized over its layer-group cycles
+            amortized = n_tok / max(cfg.n_pattern_repeats, 1)
+            chip, (pc, dc) = min(
+                (est.chip_cycle_time(cfg, n_tok, U * p // n_chips,
+                                     U - U * p // n_chips, batch, ctx,
+                                     handoff_tokens=amortized), (p, d))
+                for p, d in CHIP_SPLITS)
+            handoff_ms = est.kv_handoff_time(cfg, amortized) * 1e3
+            winner = "chip" if chip < tile else "tile"
+            rows.append({"regime": regime, "n_tok": n_tok, "batch": batch,
+                         "ctx": ctx, "tile_ms": tile * 1e3,
+                         "chip_ms": chip * 1e3,
+                         "chip_split": f"{pc}+{dc}",
+                         "handoff_ms": handoff_ms, "winner": winner})
+            emit(f"submesh,{regime},{n_tok},{batch},{ctx},{tile*1e3:.3f},"
+                 f"{chip*1e3:.3f},{pc}+{dc},{handoff_ms:.4f},{winner}")
+    return rows
+
+
+def _submesh_replay(emit):
+    """Engine replay of the chip path vs the single-mesh fused path on
+    the same trace — real sub-mesh dispatches and device_put handoffs
+    when the platform has >= 2 devices (the CI bench-smoke job forces 8
+    virtual CPU devices), honestly skipped otherwise."""
+    import jax
+
+    if len(jax.devices()) < 2:
+        emit("submesh-replay,skipped,single-device platform")
+        return {"skipped": "single-device platform"}, True
+    import jax.numpy as jnp
+
+    from repro.core.engine import BulletServer
+    from repro.core.scheduler import SchedulerConfig
+    from repro.models import init_params
+    from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                        estimator_cycle_cost)
+    from repro.serving.request import Request, WORKLOAD_SLOS
+    from repro.serving.workload import fit_trace_to_context, generate_trace
+
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    max_len = 48
+    trace = fit_trace_to_context(
+        generate_trace("sharegpt", 400.0, 1.0, seed=5,
+                       max_requests=5 if smoke else 10), max_len)
+    for r in trace:
+        r.arrival *= 1e-2
+    prompts = {r.rid: np.random.default_rng(r.rid).integers(
+        0, cfg.vocab_size, r.prompt_len, dtype=np.int32) for r in trace}
+    out = {}
+    for mode in ("tile", "chip"):
+        server = BulletServer(
+            cfg, params, slo=WORKLOAD_SLOS["sharegpt"], max_slots=4,
+            max_len=max_len, max_prefill_batch=1, partition=mode,
+            devices=jax.devices()[:2],
+            sched=SchedulerConfig(max_decode_pause_cycles=0))
+        fe = OnlineFrontend(server, VirtualClock(),
+                            cycle_cost=estimator_cycle_cost)
+        for r in trace:
+            fe.submit(Request(rid=r.rid, arrival=r.arrival,
+                              prompt_len=r.prompt_len,
+                              output_len=r.output_len), prompts[r.rid])
+        m = fe.run()
+        out[mode] = {
+            "outputs": dict(server.outputs),
+            "makespan_s": fe.clock.now(),
+            "goodput": m.goodput,
+            "chip_cycles": server.stats.chip_cycles,
+            "handoffs": server.stats.handoffs,
+        }
+        emit(f"submesh-replay,{mode},makespan={fe.clock.now():.4f}s,"
+             f"chip_cycles={server.stats.chip_cycles},"
+             f"handoffs={server.stats.handoffs}")
+    identical = out["tile"]["outputs"] == out["chip"]["outputs"]
+    assert identical, "chip token streams diverged from single-mesh fused"
+    assert out["chip"]["chip_cycles"] > 0, "replay never ran a chip cycle"
+    assert out["chip"]["handoffs"] > 0, "replay never handed KV off"
+    emit(f"submesh-replay,identical_streams={identical}")
+    for mode in out:
+        out[mode]["outputs"] = {r: len(t) for r, t in
+                                out[mode]["outputs"].items()}
+    return out, identical
+
+
 def run(emit) -> None:
     rows = _modeled_rows(emit)
     replay, identical = _replay(emit)
@@ -155,3 +271,26 @@ def run(emit) -> None:
     }
     JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True))
     emit(f"fused_vs_serial,json_written,{JSON_PATH.name}")
+
+    # chip-split sweep -> its own artifact (uploaded by bench-smoke)
+    sub_rows = _submesh_rows(emit)
+    sub_replay, sub_identical = _submesh_replay(emit)
+    contended = {r["winner"] for r in sub_rows
+                 if r["regime"] == "contended"}
+    assert contended == {"tile", "chip"}, (
+        "the contended regime should split the frontier (tradeoff "
+        f"invisible: winners {contended})")
+    sub_payload = {
+        "benchmark": "submesh_partitions",
+        "chip_splits": ["%d+%d" % s for s in CHIP_SPLITS],
+        "modeled": sub_rows,
+        "replay": sub_replay,
+        "headline": {
+            "chip_wins": sum(r["winner"] == "chip" for r in sub_rows),
+            "tile_wins": sum(r["winner"] == "tile" for r in sub_rows),
+            "identical_streams": sub_identical,
+        },
+    }
+    SUBMESH_JSON_PATH.write_text(
+        json.dumps(sub_payload, indent=2, sort_keys=True))
+    emit(f"submesh,json_written,{SUBMESH_JSON_PATH.name}")

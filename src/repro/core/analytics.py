@@ -216,6 +216,18 @@ def decode_cost(cfg: ModelConfig, batch: int, ctx: int, *,
                      c.weight_bytes + head_bytes, c.kv_bytes)
 
 
+def kv_transfer_bytes(cfg: ModelConfig, n_tokens: int,
+                      dtype_bytes: int = 2) -> float:
+    """Bytes a prefill→decode cross-mesh KV handoff moves for ``n_tokens``
+    of written cache: K and V for every attention layer of the model (the
+    page payload ``kvcache.paged.transfer_pages`` re-shards; page-padding
+    is ignored — trash-page rows transfer too in practice but the charge
+    models the useful payload, consistent with the KV terms above)."""
+    per_layer = 2 * n_tokens * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+    n_attn = sum(1 for blk in cfg.all_blocks if blk.mixer in (ATTN, SWA))
+    return float(per_layer * n_attn)
+
+
 def model_flops_per_token(cfg: ModelConfig) -> float:
     """The 6·N·D convention (N = active params) per trained token; for
     inference forward-only it is 2·N_active per token."""

@@ -44,8 +44,12 @@ from repro.core.estimator import (CycleObservation, OnlineRefitter,
 from repro.core.metadata import MetadataBuffer
 from repro.core.resource import ResourceManager
 from repro.core.scheduler import SchedulerConfig, SLOScheduler
-from repro.kvcache.paged import PagedKVPool
+from repro.kvcache.paged import PagedKVPool, transfer_pages
+from repro.launch.submesh import (SubMeshSplit, carve_submeshes, chip_mesh,
+                                  find_split)
 from repro.models import transformer as T
+from repro.models.sharding import (submesh_cache_sharding,
+                                   submesh_param_sharding)
 from repro.serving.request import Phase, Request, SLO
 
 
@@ -69,18 +73,24 @@ def _prefill_group(params_slice, x, positions, cache_slice, lengths, *,
     return x, tuple(new_entries)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def _decode_iteration(params, cache, tokens, pos, active, block_tables=None,
-                      *, cfg: ModelConfig):
+def _decode_iteration_impl(params, cache, tokens, pos, active,
+                           block_tables=None, *, cfg: ModelConfig):
     """One continuous-batching decode iteration over all slots; inactive
     slots are masked out of the sampled tokens. ``block_tables`` (B, n_b)
     switches to the block-paged cache layout — its (bucketed) width is the
-    paged kernel's grid depth."""
+    paged kernel's grid depth. Raw body: the module-level jit below serves
+    the serial/fused engine; chip-granular entries wrap their own pjit of
+    it bound to the decode sub-mesh (ChipExecutable)."""
     logits, cache = T.decode_step(params, cache, tokens, pos, cfg,
                                   block_tables=block_tables)
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     next_tokens = jnp.where(active, next_tokens, 0)
     return next_tokens[:, None], cache
+
+
+_decode_iteration = functools.partial(
+    jax.jit, static_argnames=("cfg",), donate_argnums=(1,))(
+    _decode_iteration_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -106,17 +116,23 @@ def _write_slot(cache_leaf, src_leaf, slot):
         cache_leaf, src_leaf, slot, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _prefill_group_paged(params_slice, x, positions, *, cfg: ModelConfig):
+def _prefill_group_paged_impl(params_slice, x, positions, *,
+                              cfg: ModelConfig):
     """Run one pattern-repeat group over the prompt batch, returning the
     raw full-sequence KV entries; the caller scatters them straight into
-    pooled pages — no dense ``max_len`` row is ever materialized."""
+    pooled pages — no dense ``max_len`` row is ever materialized. Raw
+    body: the module-level jit below serves the serial engine; chip
+    entries wrap their own pjit bound to the prefill sub-mesh."""
     entries = []
     for j, blk in enumerate(cfg.pattern):
         x, entry, _ = T._apply_block_full(
             x, params_slice[j], blk, cfg, None, positions, None)
         entries.append((entry["k"], entry["v"]))
     return x, tuple(entries)
+
+
+_prefill_group_paged = functools.partial(
+    jax.jit, static_argnames=("cfg",))(_prefill_group_paged_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rep", "decode_share"),
@@ -150,6 +166,25 @@ class FusedExecutable(NamedTuple):
     fn: Callable
 
 
+class ChipExecutable(NamedTuple):
+    """One chip-granular execution state of the resource manager's table
+    (§3.4.2, second granularity): a pre-built pjit pair bound to a
+    disjoint (prefill sub-mesh, decode sub-mesh) split of the device
+    group. The prefill executable runs layer groups replicated on the
+    prefill sub-mesh and scatters prompt KV into the prefill-side staging
+    page pool; the decode executable runs continuous-batching iterations
+    on the decode sub-mesh's page pool. The two only meet at the
+    ``jax.device_put`` KV handoff (kvcache.paged.transfer_pages) when a
+    prompt finishes. Switching entries is still a dict lookup; lowering is
+    per activation shape, exactly like FusedExecutable."""
+    config_id: int
+    split: SubMeshSplit
+    p_sharding: object        # replicated NamedSharding, prefill sub-mesh
+    d_sharding: object        # replicated NamedSharding, decode sub-mesh
+    prefill_fn: Callable
+    decode_fn: Callable
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_group_pages(cache_leaf, kv, page_map, rep):
     """Scatter one layer group's prefill K/V into the pooled pages of
@@ -176,6 +211,10 @@ class EngineStats:
     #: OnlineRefitter rejected on its hysteresis margin
     refits: int = 0
     refits_rejected: int = 0
+    #: chip-granular cycles (disjoint sub-mesh dispatches) and cross-mesh
+    #: KV handoffs (requests whose pages re-sharded prefill→decode mesh)
+    chip_cycles: int = 0
+    handoffs: int = 0
 
 
 class DecodeWork(NamedTuple):
@@ -220,6 +259,15 @@ class PrefillTask:
     #: (B, blocks) physical pages, uploaded to device once at admission
     #: (immutable for the task's lifetime — every group reuses it)
     page_map: Optional[jax.Array] = None
+    #: partition granularity pinned at admission: "tile" runs the fused
+    #: (or serial) co-located path, "chip" runs every layer group on the
+    #: current chip entry's prefill sub-mesh with a cross-mesh KV handoff
+    #: at migration. Pinned for the task's lifetime — pages scatter into
+    #: one pool consistently.
+    granularity: str = "tile"
+    #: sharding the task's device state currently lives on (chip-enabled
+    #: serving only; None = default placement)
+    sharding: Optional[object] = None
 
 
 class BulletServer:
@@ -232,7 +280,8 @@ class BulletServer:
                  sched: SchedulerConfig = SchedulerConfig(),
                  dtype=jnp.float32, paged: Optional[bool] = None,
                  page_size: int = 16, fused: Optional[bool] = None,
-                 refit=None, refit_interval: int = 32):
+                 refit=None, refit_interval: int = 32,
+                 partition: str = "tile", devices=None):
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -264,20 +313,56 @@ class BulletServer:
                 f"{cfg.name}: fused spatial execution streams decode KV "
                 "from the block-paged pool; needs paged=True")
         self.fused = fused
+        # chip-granular sub-mesh partitions (§3.4 second granularity,
+        # docs/PARTITIONS.md): "chip" forces every prefill task onto a
+        # disjoint (prefill sub-mesh, decode sub-mesh) split with a KV
+        # handoff at migration; "auto" lets the scheduler's combined-table
+        # argmin pick per task; "tile" (default) keeps the single-mesh
+        # fused/serial paths untouched.
+        if partition not in ("tile", "chip", "auto"):
+            raise ValueError(f"partition={partition!r}: want tile|chip|auto")
+        self.partition = partition
+        splits: List[SubMeshSplit] = []
+        if partition in ("chip", "auto"):
+            if not paged and partition == "chip":
+                raise ValueError(
+                    f"{cfg.name}: chip-granular partitions hand KV off "
+                    "through the block-paged pool; needs paged=True")
+            devs = list(devices) if devices is not None else jax.devices()
+            splits = carve_submeshes(devs) if paged else []
+            if partition == "chip" and not splits:
+                raise ValueError(
+                    "partition='chip' needs >= 2 jax devices to carve "
+                    f"sub-meshes from (have {len(devs)}); run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                    "or use partition='auto' to fall back to tile")
+        self._chip_enabled = bool(splits)
+        self._decode_sharding = None
         # the scheduler's contention estimates must match the execution
         # mode: serial dispatches never co-locate phases spatially
         sched = replace(sched, fused=fused)
         self.scheduler = SLOScheduler(cfg, self.est, slo, sched)
-        # pre-build one fused executable per quantized partition (§3.4.2)
-        # so _switch selects among real execution states, not just numbers
+        # pre-build one execution state per partition (§3.4.2) so _switch
+        # selects among real execution states, not just numbers: fused
+        # executables for the tile half, pjit pairs for the chip half
         self.rm = ResourceManager(
             self.est.hw, sched.unit_quantum,
-            builder=self._build_fused_executable if fused else None)
+            builder=self._build_fused_executable if fused else None,
+            chip_splits=[s.key for s in splits],
+            chip_builder=(functools.partial(self._build_chip_executable,
+                                            splits=splits)
+                          if splits else None))
         # the scheduler may only propose partitions this table pre-built
         # (fused mode additionally searches them under the fused-cycle
         # objective); _switch asserts the contract held
         self.scheduler.split_candidates = [
-            (p.prefill_units, p.decode_units) for p in self.rm.partitions]
+            (p.prefill_units, p.decode_units) for p in self.rm.tile_entries]
+        if self._chip_enabled:
+            # the combined table: the fused-objective search prices chip
+            # entries (no co-location contention + handoff) against tile
+            # entries (Eq. 2 contention) — disaggregation-vs-sharing as a
+            # table argmin
+            self.scheduler.partition_table = self.rm.partitions
         # online estimator refit (§3.2.2 closed loop): refit=False pins
         # the offline params; True/None builds a default OnlineRefitter;
         # an OnlineRefitter instance is used as-is. Refits only happen
@@ -342,6 +427,25 @@ class BulletServer:
         self.last_fused: bool = False
         #: config_id of the pre-built executable the last fused cycle ran
         self.last_fused_exec: Optional[int] = None
+        #: True when the last step ran a chip-granular (disjoint sub-mesh)
+        #: cycle; handoff_tokens > 0 on the cycle whose finished prefill
+        #: re-sharded its pages across the interconnect
+        self.last_chip: bool = False
+        self.last_handoff_tokens: int = 0
+        if self._chip_enabled:
+            # ``devs`` bound above when the split table was carved
+            self._global_sharding = submesh_param_sharding(chip_mesh(devs))
+            #: params replicated per sub-mesh, device_put lazily and cached
+            #: by placement (each split reuses its sides' copies)
+            self._mesh_params: Dict[object, object] = {}
+            #: prefill-side staging page pool: chip tasks scatter prompt KV
+            #: here (resident on the prefill sub-mesh); transfer_pages
+            #: re-shards written pages into self.cache at migration
+            self.cache_p = T.init_paged_cache(cfg, self.pool.n_blocks,
+                                              page_size, dtype)
+            # decode-side state starts homed on the global mesh (tile
+            # semantics: every chip co-resident); chip cycles re-home it
+            self._home_decode(self._global_sharding)
 
     def _build_fused_executable(self, part) -> FusedExecutable:
         """ResourceManager builder: one fused-step launcher per quantized
@@ -350,6 +454,69 @@ class BulletServer:
         fn = functools.partial(_fused_step, cfg=self.cfg,
                                decode_share=round(part.decode_share, 6))
         return FusedExecutable(part.config_id, part.decode_share, fn)
+
+    def _build_chip_executable(self, part, *, splits) -> ChipExecutable:
+        """ResourceManager chip builder: one pjit pair per chip split —
+        the prefill layer-group step bound (by input placement) to the
+        prefill sub-mesh and the decode iteration to the decode sub-mesh.
+        Each entry owns its jit wrappers, so switching entries never
+        evicts another entry's compiled executables (lowering is lazy per
+        activation shape, as for the tile half)."""
+        split = find_split(splits, part.prefill_chips, part.decode_chips)
+        assert split is not None, part
+        return ChipExecutable(
+            part.config_id, split,
+            submesh_param_sharding(split.prefill_mesh),
+            submesh_cache_sharding(split.decode_mesh),
+            jax.jit(functools.partial(_prefill_group_paged_impl,
+                                      cfg=self.cfg)),
+            jax.jit(functools.partial(_decode_iteration_impl, cfg=self.cfg),
+                    donate_argnums=(1,)))
+
+    # -- sub-mesh placement (chip-enabled serving only) ------------------
+    def _params_for(self, sharding):
+        """The model params replicated onto ``sharding``, cached per
+        placement — the resident per-sub-mesh copies of the pre-configured
+        execution states."""
+        if not self._chip_enabled or sharding is None:
+            return self.params
+        p = self._mesh_params.get(sharding)
+        if p is None:
+            p = jax.tree.map(lambda a: jax.device_put(a, sharding),
+                             self.params)
+            self._mesh_params[sharding] = p
+        return p
+
+    def _home_decode(self, sharding) -> None:
+        """Re-home the decode-side device state (page pool, slot tokens /
+        positions / active mask) onto ``sharding``: the decode sub-mesh of
+        the current chip entry, or the global mesh for tile-granular and
+        serial cycles. No-op when already there."""
+        if not self._chip_enabled or self._decode_sharding == sharding:
+            return
+        put = functools.partial(jax.device_put, device=sharding)
+        self.cache = jax.tree.map(put, self.cache)
+        self.tokens = put(self.tokens)
+        self.pos = put(self.pos)
+        self.active = put(self.active)
+        self._dev_tables.clear()
+        self._decode_sharding = sharding
+
+    def _home_task(self, task: PrefillTask, sharding) -> None:
+        """Home an in-flight prefill task's device state onto ``sharding``
+        (the current chip entry's prefill sub-mesh, or the global mesh for
+        tile tasks under chip-enabled serving)."""
+        if not self._chip_enabled or task.sharding == sharding:
+            return
+        task.x = jax.device_put(task.x, sharding)
+        task.positions = jax.device_put(task.positions, sharding)
+        task.lengths = jax.device_put(task.lengths, sharding)
+        if task.page_map is not None:
+            task.page_map = jax.device_put(task.page_map, sharding)
+        if task.granularity == "chip":
+            put = functools.partial(jax.device_put, device=sharding)
+            self.cache_p = jax.tree.map(put, self.cache_p)
+        task.sharding = sharding
 
     # -- device block tables (paged mode) -------------------------------
     def _sync_tables(self) -> None:
@@ -369,10 +536,14 @@ class BulletServer:
 
     def _device_tables(self, n_b: int) -> jax.Array:
         """The first ``n_b`` table columns on device, uploaded lazily and
-        reused across iterations until ownership changes."""
+        reused across iterations until ownership changes (or, under
+        chip-enabled serving, until the decode state re-homes — the cache
+        is cleared on both events, so the key stays the bucket width)."""
         bt = self._dev_tables.get(n_b)
         if bt is None:
             bt = jnp.asarray(self._host_tables[:, :n_b])
+            if self._chip_enabled and self._decode_sharding is not None:
+                bt = jax.device_put(bt, self._decode_sharding)
             self._dev_tables[n_b] = bt
         return bt
 
@@ -420,13 +591,15 @@ class BulletServer:
     def _switch(self, resources) -> None:
         """Swap partitions, counting only actual re-configurations."""
         if self.fused:
-            # the split search is defined over the prebuilt FusedExecutable
-            # table; a proposal not on it means scheduler and resource
-            # manager have drifted apart (nearest() would silently snap it,
-            # masking the bug — fail loudly instead)
+            # the split search is defined over the prebuilt executable
+            # table (both granularities); a proposal not on it means
+            # scheduler and resource manager have drifted apart (nearest()
+            # would silently snap it, masking the bug — fail loudly)
             assert self.rm.on_table(resources), (
                 f"scheduler proposed off-table partition "
-                f"({resources.prefill_units}, {resources.decode_units}); "
+                f"({resources.granularity}: {resources.prefill_units}, "
+                f"{resources.decode_units}, chips "
+                f"{resources.prefill_chips}+{resources.decode_chips}); "
                 f"table quantum={self.rm.quantum}")
         before = self.rm.current.config_id
         part = self.rm.switch(resources)
@@ -435,7 +608,10 @@ class BulletServer:
         self.buffer.write(lambda s: (
             setattr(s.resources, "prefill_units", part.prefill_units),
             setattr(s.resources, "decode_units", part.decode_units),
-            setattr(s.resources, "config_id", part.config_id)))
+            setattr(s.resources, "config_id", part.config_id),
+            setattr(s.resources, "granularity", part.granularity),
+            setattr(s.resources, "prefill_chips", part.prefill_chips),
+            setattr(s.resources, "decode_chips", part.decode_chips)))
 
     # -- prefill engine ---------------------------------------------------
     def _resume_len(self, r: Request) -> int:
@@ -563,6 +739,13 @@ class BulletServer:
         P.total_layers = self.cfg.n_layers
         P.n_tokens = self.ptask.n_tokens
         P.n_waiting = len(self.pending)
+        if self._chip_enabled:
+            # pin the task's granularity for its lifetime (pages scatter
+            # into one pool consistently): forced under partition="chip",
+            # the scheduler's combined-table argmin under "auto"
+            self.ptask.granularity = (
+                "chip" if self.partition == "chip"
+                else self.scheduler.preferred_granularity(self.buffer.state))
         return True
 
     def _prefill_step(self, now: float) -> bool:
@@ -585,7 +768,13 @@ class BulletServer:
         the fused cycle launches its group inside the fused executable
         instead) and migrate to decode when the last group completes."""
         rep = task.rep
-        p_slice = jax.tree.map(lambda a: a[rep], self.params["blocks"],
+        params = self.params
+        if self._chip_enabled:
+            # serial launches own the whole machine: tile semantics
+            self._home_decode(self._global_sharding)    # paged scatter target
+            self._home_task(task, self._global_sharding)
+            params = self._params_for(self._global_sharding)
+        p_slice = jax.tree.map(lambda a: a[rep], params["blocks"],
                                is_leaf=lambda a: hasattr(a, "shape"))
         if self.paged:
             task.x, kv_entries = _prefill_group_paged(
@@ -623,10 +812,24 @@ class BulletServer:
     def _finish_prefill(self, task: PrefillTask, now: float) -> None:
         """Migrate the finished batch to decode. Paged mode: the KV already
         sits in pooled pages, so the handoff is pure block-table ownership
-        (pool.migrate) — no device copy. Dense fallback: copy each
-        request's ``max_len`` cache row into its decode slot."""
+        (pool.migrate) — no device copy. Chip-granular tasks additionally
+        re-shard the written pages from the prefill sub-mesh's staging pool
+        onto the decode sub-mesh first (the jax.device_put KV handoff the
+        estimator charges at ici_bw). Dense fallback: copy each request's
+        ``max_len`` cache row into its decode slot."""
+        params = (self._params_for(task.sharding)
+                  if task.sharding is not None else self.params)
         first_tokens = np.asarray(
-            _final_logits(self.params, task.x, task.lengths, cfg=self.cfg))
+            _final_logits(params, task.x, task.lengths, cfg=self.cfg))
+        if task.granularity == "chip" and self._chip_enabled:
+            lens = np.asarray(task.lengths)
+            blocks: List[int] = []
+            for i, r in enumerate(task.batch):
+                blocks.extend(self.pool.written_blocks(r.rid, int(lens[i])))
+            self.cache = transfer_pages(self.cache_p, self.cache, blocks,
+                                        self._decode_sharding)
+            self.stats.handoffs += len(task.batch)
+            self.last_handoff_tokens += int(lens.sum())
         P = self.buffer.state.prefill
         if self.paged:
             # migrated slots flip PREFILL->DECODE: re-map their pages into
@@ -704,6 +907,16 @@ class BulletServer:
         self.buffer.state.decode.paused = False
         self._switch(decision.resources)
 
+        params = self.params
+        if self._chip_enabled:
+            # decode-only cycles run wherever the decode state already
+            # lives (the global mesh at init, the last chip entry's
+            # decode sub-mesh between chip tasks): re-homing is left to
+            # the cycle kinds that require a specific placement, so the
+            # page pool never ping-pongs sub-mesh <-> global mesh across
+            # task boundaries — interconnect traffic the estimator's
+            # handoff charge does not cover
+            params = self._params_for(self._decode_sharding)
         act_np = np.asarray(self.active)
         pos_np = np.asarray(self.pos)
         # live context per slot that runs this iteration — the bytes the
@@ -717,13 +930,13 @@ class BulletServer:
             streamed = (n_b * self.page_size * self.max_slots
                         // max(n_ran, 1),) * n_ran
             next_tokens, self.cache = _decode_iteration(
-                self.params, self.cache, self.tokens, self.pos, self.active,
+                params, self.cache, self.tokens, self.pos, self.active,
                 self._device_tables(n_b), cfg=self.cfg)
         else:
             streamed = (self.max_len * self.max_slots
                         // max(n_ran, 1),) * n_ran
             next_tokens, self.cache = _decode_iteration(
-                self.params, self.cache, self.tokens, self.pos, self.active,
+                params, self.cache, self.tokens, self.pos, self.active,
                 cfg=self.cfg)
         self._finish_decode_iteration(next_tokens, act_np, ctxs_ran,
                                       streamed, now)
@@ -786,6 +999,12 @@ class BulletServer:
         self.buffer.state.decode.paused = False
         ex = self.rm.executable()
 
+        params = self.params
+        if self._chip_enabled:
+            # tile-granular fused cycle: every chip co-resident
+            self._home_decode(self._global_sharding)
+            self._home_task(task, self._global_sharding)
+            params = self._params_for(self._global_sharding)
         act_np = np.asarray(self.active)
         pos_np = np.asarray(self.pos)
         ctxs_ran = tuple(int(p) + 1 for p, a in zip(pos_np, act_np) if a)
@@ -796,7 +1015,7 @@ class BulletServer:
         streamed = (n_b * self.page_size * self.max_slots
                     // max(n_ran, 1),) * n_ran
         task.x, next_tokens, self.cache = ex.fn(
-            self.params, self.cache, task.x, task.positions,
+            params, self.cache, task.x, task.positions,
             task.page_map, self.tokens, self.pos, self.active,
             self._device_tables(n_b), rep=task.rep)
         self.last_fused = True
@@ -811,6 +1030,68 @@ class BulletServer:
         self._prefill_group_done(task, now)
         return True
 
+    # -- chip engine (disjoint sub-mesh co-execution, §3.4) ---------------
+    def _chip_cycle(self, now: float) -> bool:
+        """One chip-granular engine cycle: the prefill layer group and the
+        decode iteration dispatch onto DISJOINT sub-meshes — concurrent
+        spatial execution with no shared chip (async dispatch overlaps
+        them for real; the estimator charges the max of the sides). One
+        scheduling cycle covers both phases, restricted to the chip half
+        of the table; the §3.3.3 pause never fires (decode owns its chips
+        — nothing to borrow). Prefill scatters prompt KV into the
+        prefill-mesh staging pool; the finished prompt's pages re-shard
+        onto the decode mesh in _finish_prefill."""
+        task = self.ptask
+        state = self.buffer.read()
+        decision = self.scheduler.schedule(state, now, self._pending_meta(),
+                                           granularity="chip")
+        self._apply_reorder(decision.reorder)
+        self._switch(decision.resources)
+        ex = self.rm.executable()
+        assert isinstance(ex, ChipExecutable), (
+            f"chip task but executable {type(ex).__name__} for config "
+            f"{self.rm.current}")
+
+        # prefill side first, so both sub-meshes run concurrently
+        self._home_task(task, ex.p_sharding)
+        p_params = self._params_for(ex.p_sharding)
+        rep = task.rep
+        p_slice = jax.tree.map(lambda a: a[rep], p_params["blocks"],
+                               is_leaf=lambda a: hasattr(a, "shape"))
+        task.x, kv_entries = ex.prefill_fn(p_slice, task.x, task.positions)
+        pm = task.page_map
+        rep_ix = jnp.int32(rep)
+        for j, (k_e, v_e) in enumerate(kv_entries):
+            leaf = self.cache_p["blocks"][j]
+            leaf["k"] = _scatter_group_pages(leaf["k"], k_e, pm, rep_ix)
+            leaf["v"] = _scatter_group_pages(leaf["v"], v_e, pm, rep_ix)
+
+        # decode side on its own sub-mesh (when any slot is live)
+        act_np = np.asarray(self.active)
+        did_decode = bool(np.any(act_np))
+        if did_decode:
+            self._home_decode(ex.d_sharding)
+            d_params = self._params_for(ex.d_sharding)
+            pos_np = np.asarray(self.pos)
+            ctxs_ran = tuple(int(p) + 1
+                             for p, a in zip(pos_np, act_np) if a)
+            n_ran = len(ctxs_ran)
+            if self._tables_dirty:
+                self._sync_tables()
+            n_b = self._decode_block_bucket(ctxs_ran)
+            streamed = (n_b * self.page_size * self.max_slots
+                        // max(n_ran, 1),) * n_ran
+            next_tokens, self.cache = ex.decode_fn(
+                d_params, self.cache, self.tokens, self.pos, self.active,
+                self._device_tables(n_b))
+        self.last_chip = True
+        self.stats.chip_cycles += 1
+        if did_decode:
+            self._finish_decode_iteration(next_tokens, act_np, ctxs_ran,
+                                          streamed, now)
+        self._prefill_group_done(task, now)
+        return True
+
     # -- online estimator refit (§3.2.2 closed loop) ----------------------
     def last_cycle_observation(self) -> Optional[CycleObservation]:
         """What the most recent step() executed, as the estimator-facing
@@ -821,6 +1102,14 @@ class BulletServer:
         if w is None and not self.last_prefill_tokens:
             return None
         R = self.buffer.state.resources
+        if self.last_chip:
+            return CycleObservation(
+                "chip", self.last_prefill_tokens,
+                max(R.prefill_units, 1), max(R.decode_units, 1),
+                w.batch if w is not None else 0,
+                max(w.mean_context, 1) if w is not None else 1,
+                (tuple(w.streamed) or None) if w is not None else None,
+                handoff_tokens=self.last_handoff_tokens)
         if self.last_fused and w is not None and self.last_prefill_tokens:
             return CycleObservation(
                 "fused", self.last_prefill_tokens,
@@ -884,7 +1173,13 @@ class BulletServer:
         self.last_prefill_tokens = 0
         self.last_decode = None
         self.last_fused = False
+        self.last_chip = False
+        self.last_handoff_tokens = 0
         did_admit = self._admit_prefill(now)
+        if self.ptask is not None and self.ptask.granularity == "chip":
+            # chip-pinned task: every layer group runs on its sub-mesh,
+            # with the decode iteration concurrent on the disjoint one
+            return self._chip_cycle(now) or did_admit
         if (self.fused and self.ptask is not None
                 and bool(np.any(np.asarray(self.active)))):
             return self._fused_cycle(now) or did_admit

@@ -281,6 +281,48 @@ class PerfEstimator:
                                        page_size=page_size)
         return t
 
+    def kv_handoff_time(self, cfg: ModelConfig, n_tokens: int,
+                        dtype_bytes: int = 2) -> float:
+        """Cross-mesh KV handoff charge: the K/V bytes written for
+        ``n_tokens`` of finished prefill, re-sharded from the prefill
+        sub-mesh onto the decode sub-mesh over the interconnect —
+        ``bytes / ici_bw``. This is the term chip-granular entries pay
+        instead of Eq. 2's co-location contention; the scheduler's
+        combined-table argmin is exactly the handoff-vs-contention
+        comparison (docs/PARTITIONS.md)."""
+        if n_tokens <= 0:
+            return 0.0
+        return (A.kv_transfer_bytes(cfg, n_tokens, dtype_bytes)
+                / max(self.hw.ici_bw, 1.0))
+
+    def chip_cycle_time(self, cfg: ModelConfig, n_tokens: float,
+                        prefill_units: int, decode_units: int,
+                        batch: int, ctx: int, *,
+                        contexts: Optional[Sequence[int]] = None,
+                        page_size: Optional[int] = None,
+                        layer_group: Optional[int] = None,
+                        handoff_tokens: float = 0.0) -> float:
+        """One chip-granular engine cycle: the prefill layer group and the
+        decode iteration run concurrently on *disjoint* sub-meshes, so the
+        cycle is the MAX of the two sides' partitioned Eq. 2 times with NO
+        co-location contention (``colocated=False`` — neither p_c/p_b nor
+        a shared HBM pipe applies across chips), plus the KV handoff
+        charge for any prefill that finished and re-sharded its pages this
+        cycle. The disaggregation-vs-sharing tradeoff in one line:
+        ``max(p, d) + handoff`` vs the fused ``max(p, d)/(1-s)`` under
+        contention."""
+        lg = layer_group if layer_group is not None else len(cfg.pattern)
+        t_p = t_d = 0.0
+        if n_tokens > 0:
+            t_p = self.prefill_layer_time(
+                cfg, int(n_tokens), 0, max(prefill_units, 1),
+                colocated=False) * lg
+        if batch > 0 or contexts:
+            t_d = self.decode_iter_time(
+                cfg, max(batch, 1), max(ctx, 1), max(decode_units, 1),
+                colocated=False, contexts=contexts, page_size=page_size)
+        return max(t_p, t_d) + self.kv_handoff_time(cfg, handoff_tokens)
+
     def lockstep_iter_time(self, cfg: ModelConfig,
                            prefill_parts: List[Tuple[int, int]],
                            ds: int, ctx_d: int, *,
@@ -475,11 +517,14 @@ class CycleObservation(NamedTuple):
 
     ``kind`` selects the charging model: ``"fused"`` cycles are charged
     Eq. 2's co-located max (``fused_cycle_time``), ``"serial"`` cycles the
-    full-machine sum of their dispatches (``serial_cycle_time``).
+    full-machine sum of their dispatches (``serial_cycle_time``), and
+    ``"chip"`` cycles the disjoint-sub-mesh max plus the KV handoff charge
+    (``chip_cycle_time``; ``handoff_tokens`` > 0 on the cycle whose
+    finished prefill re-sharded its pages across the interconnect).
     ``contexts`` carries the per-slot KV tokens the decode side actually
     streamed (page-bucketed), exactly what virtual-clock replay charges.
     """
-    kind: str                             # "fused" | "serial"
+    kind: str                             # "fused" | "serial" | "chip"
     n_tokens: int                         # prefill tokens this cycle (0 = none)
     prefill_units: int
     decode_units: int
@@ -487,6 +532,7 @@ class CycleObservation(NamedTuple):
     ctx: int                              # mean live context of the batch
     contexts: Optional[Tuple[int, ...]] = None   # streamed KV tokens per slot
     layer_group: Optional[int] = None     # layers launched (None = pattern)
+    handoff_tokens: int = 0               # KV tokens re-sharded cross-mesh
 
 
 def predict_cycle(est: PerfEstimator, cfg: ModelConfig,
@@ -500,6 +546,12 @@ def predict_cycle(est: PerfEstimator, cfg: ModelConfig,
             cfg, obs.n_tokens, max(obs.prefill_units, 1),
             max(obs.decode_units, 1), max(obs.batch, 1), max(obs.ctx, 1),
             contexts=obs.contexts, layer_group=obs.layer_group)
+    if obs.kind == "chip":
+        return est.chip_cycle_time(
+            cfg, obs.n_tokens, max(obs.prefill_units, 1),
+            max(obs.decode_units, 1), obs.batch, max(obs.ctx, 1),
+            contexts=obs.contexts, layer_group=obs.layer_group,
+            handoff_tokens=obs.handoff_tokens)
     return est.serial_cycle_time(
         cfg, obs.n_tokens, obs.batch, max(obs.ctx, 1),
         contexts=obs.contexts, layer_group=obs.layer_group)

@@ -58,10 +58,20 @@ class DecodeStatus:
 
 @dataclass
 class ResourceStatus:
-    """R_k: units allocated to prefill (u_k) and decode (v_k)."""
+    """R_k: units allocated to prefill (u_k) and decode (v_k), plus the
+    partition descriptor that disambiguates *which* execution state those
+    units name. ``granularity`` is ``"tile"`` (both phases share every
+    chip spatially; the fused-executable table) or ``"chip"`` (disjoint
+    prefill/decode sub-meshes of ``prefill_chips``/``decode_chips``
+    devices; the pjit-pair table). Unit counts alone are ambiguous — a
+    2+2-chip split and a (16, 16)-unit tile split are different machines
+    — so the resource-manager table is keyed on the full descriptor."""
     prefill_units: int = 0
     decode_units: int = 0
     config_id: int = 0
+    granularity: str = "tile"
+    prefill_chips: int = 0
+    decode_chips: int = 0
 
 
 @dataclass

@@ -97,6 +97,13 @@ class SLOScheduler:
         #: the discrete-event simulator, which has no executable table)
         #: keeps the quantized per-phase Algorithm 2 search.
         self.split_candidates = split_candidates
+        #: the engine's full partition table (List[PartitionConfig], both
+        #: granularities) when chip-granular sub-meshes exist. The
+        #: combined-table argmin prices tile entries with Eq. 2's fused
+        #: co-location contention and chip entries with no contention but
+        #: a KV-handoff charge (docs/PARTITIONS.md) — the
+        #: disaggregation-vs-sharing tradeoff as one table argmin.
+        self.partition_table: Optional[List] = None
 
     # -- progress tracking (Algorithm 1 lines 2-10) -------------------
     def estimate_ttfts(self, state: SystemState, now: float,
@@ -225,6 +232,101 @@ class SLOScheduler:
         # minimizes the fused TPOT, so the argmin is the best rescue
         return best[3], best[4], best[0]
 
+    # -- chip-granular search (sub-mesh disaggregation) ----------------
+    def _chip_candidates(self) -> List:
+        return [p for p in (self.partition_table or [])
+                if getattr(p, "granularity", "tile") == "chip"]
+
+    def _chip_cycle_ms(self, state: SystemState, part) -> float:
+        """Predicted duration of one chip-granular cycle under ``part``:
+        disjoint sub-meshes run the phases concurrently (max, no
+        contention) and the task's one-shot KV handoff is amortized over
+        its layer-group cycles — n_tokens · lg / total_layers per cycle —
+        so the argmin weighs handoff cost at the same per-cycle
+        granularity it weighs contention."""
+        P, D = state.prefill, state.decode
+        lg = self.sc.layer_group * len(self.cfg.pattern)
+        total_layers = max(P.total_layers, lg) or lg
+        amortized = P.n_tokens * lg / total_layers
+        return 1e3 * self.est.chip_cycle_time(
+            self.cfg, max(P.n_tokens, 1), part.prefill_units,
+            part.decode_units, max(D.n_d, 1), max(int(D.context), 1),
+            layer_group=lg, handoff_tokens=amortized)
+
+    def _chip_split_search(self, state: SystemState, target_tpot_ms: float):
+        """Argmin of the predicted chip-cycle time over the chip entries,
+        TPOT-gated like the fused search (a chip cycle emits one token per
+        running slot, so the cycle time is the decode cadence there too).
+        Ties break toward more decode chips. Returns (entry, cycle_ms)."""
+        gated = ungated = None            # (t_ms, -decode_chips, cid, part)
+        for p in self._chip_candidates():
+            t_ms = self._chip_cycle_ms(state, p)
+            key = (t_ms, -p.decode_chips, p.config_id, p)
+            if ungated is None or key[:3] < ungated[:3]:
+                ungated = key
+            if t_ms <= target_tpot_ms and (gated is None
+                                           or key[:3] < gated[:3]):
+                gated = key
+        best = gated if gated is not None else ungated
+        return best[3], best[0]
+
+    def combined_argmin(self, state: SystemState):
+        """The §3.4 table argmin over BOTH granularities for the current
+        co-resident mix: tile entries priced at Eq. 2's fused co-located
+        cycle (contention, shared HBM pipe), chip entries at the
+        disjoint-sub-mesh max plus amortized KV handoff. Returns
+        (granularity, cycle_ms) of the winner — ``"chip"`` exactly when
+        the modeled handoff cost undercuts the modeled co-location
+        contention. None when either phase is absent (the tradeoff needs
+        both resident)."""
+        chips = self._chip_candidates()
+        total = self.est.hw.total_units
+        if (not chips or state.decode.n_d == 0
+                or state.prefill.n_tokens <= 0):
+            return None
+        _, chip_ms = self._chip_split_search(state, float("inf"))
+        if self.sc.fused and self.split_candidates \
+                and self._fused_candidates(total):
+            tile_ms = min(self._fused_cycle_ms(state, u, v)
+                          for u, v in self._fused_candidates(total))
+        else:
+            P, D = state.prefill, state.decode
+            lg = self.sc.layer_group * len(self.cfg.pattern)
+            tile_ms = 1e3 * self.est.serial_cycle_time(
+                self.cfg, max(P.n_tokens, 1), max(D.n_d, 1),
+                max(int(D.context), 1), layer_group=lg)
+        return ("chip", chip_ms) if chip_ms < tile_ms else ("tile", tile_ms)
+
+    def preferred_granularity(self, state: SystemState) -> str:
+        """Task-granularity pick at prefill admission: the combined-table
+        argmin's winner (tile when the tradeoff is moot)."""
+        best = self.combined_argmin(state)
+        return best[0] if best is not None else "tile"
+
+    def _to_chip(self, state: SystemState, d: Decision) -> Decision:
+        """Restrict a Decision to the chip-granular half of the table (the
+        engine pins a prefill task's granularity for its lifetime; every
+        scheduling cycle of a chip task must name a chip entry). Both
+        phases resident: TPOT-gated chip split search. One phase absent:
+        snap to the chip entry nearest the tile decision's unit split.
+        The §3.3.3 pause never applies — decode owns its chips outright,
+        so there is nothing to borrow."""
+        chips = self._chip_candidates()
+        if not chips:
+            return d
+        if state.decode.n_d > 0 and state.prefill.n_tokens > 0:
+            part, _ = self._chip_split_search(
+                state, self.sc.tpot_margin * self.slo.tpot_ms)
+        else:
+            part = min(chips, key=lambda p: (
+                abs(p.prefill_units - d.resources.prefill_units),
+                p.config_id))
+        d.resources = ResourceStatus(
+            part.prefill_units, part.decode_units, part.config_id,
+            "chip", part.prefill_chips, part.decode_chips)
+        d.pause_decode = False
+        return d
+
     def _pause_ok(self, state: SystemState, dt_pause: float) -> bool:
         """Is delaying decode by ``dt_pause`` seconds safe for every
         in-flight request's *cumulative* TPOT (§3.3.3 borrow)?"""
@@ -352,7 +454,12 @@ class SLOScheduler:
 
     # -- main entry (Algorithm 1) --------------------------------------
     def schedule(self, state: SystemState, now: float,
-                 pending: List[Tuple[int, float, int]]) -> Decision:
+                 pending: List[Tuple[int, float, int]],
+                 granularity: Optional[str] = None) -> Decision:
+        """One scheduling cycle. ``granularity="chip"`` restricts the
+        decision to chip-granular entries (the engine passes it for
+        cycles driving a chip-pinned prefill task); None keeps the
+        tile-granular Algorithm 1/2 behavior."""
         total = self.est.hw.total_units
         ttfts = self.estimate_ttfts(state, now, pending)
         tpots = self.observed_tpots(state)
@@ -375,10 +482,6 @@ class SLOScheduler:
             d = self._reduce_decode(state, total,         # line 17-18
                                     ttft_violated=True)
         d.reorder = order
-        if d.pause_decode:
-            self.decode_paused_cycles += 1
-        else:
-            self.decode_paused_cycles = 0
         # nothing to prefill -> give decode everything
         if state.prefill.active_rid is None and not pending:
             d = Decision(ResourceStatus(0, total), reorder=order,
@@ -388,4 +491,10 @@ class SLOScheduler:
                          reason="prefill_only")
         # every decision the engine sees must name a prebuilt partition
         d.resources = self._snap_to_table(d.resources)
+        if granularity == "chip":
+            d = self._to_chip(state, d)
+        if d.pause_decode:
+            self.decode_paused_cycles += 1
+        else:
+            self.decode_paused_cycles = 0
         return d

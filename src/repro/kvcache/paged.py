@@ -19,6 +19,7 @@ Invariants (property-tested in tests/test_kvcache.py):
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -116,6 +117,18 @@ class PagedKVPool:
     def table(self, rid: int) -> Optional[PageTable]:
         return self._tables.get(rid)
 
+    def written_blocks(self, rid: int, n_tokens: int) -> List[int]:
+        """The leading blocks of ``rid`` that actually hold written KV —
+        ``ceil(n_tokens / block_size)`` of its reservation. A request
+        reserves prompt + output up front, but a prefill→decode handoff
+        only needs to move the pages the prefill wrote; decode writes its
+        future tokens into the remaining reserved blocks on the far side
+        directly."""
+        table = self._tables.get(rid)
+        if table is None:
+            return []
+        return table.blocks[:self._blocks_for(max(n_tokens, 0))]
+
     def device_block_table(self, slot_rids: Sequence[Optional[int]],
                            max_blocks: int,
                            fill: Optional[int] = None) -> np.ndarray:
@@ -144,3 +157,66 @@ class PagedKVPool:
         assert set(owned).isdisjoint(self._free), "freed block still owned"
         for t in self._tables.values():
             assert len(t.blocks) == self._blocks_for(t.n_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Per-mesh device pools: the cross-mesh page handoff (chip granularity)
+# ---------------------------------------------------------------------------
+# Under chip-granular partitions (launch/submesh.py) the engine keeps TWO
+# device page pools addressed by the same logical block ids of one
+# PagedKVPool: a prefill-staging pool resident on the prefill sub-mesh and
+# the decode pool resident on the decode sub-mesh. Prefill scatters prompt
+# KV into its own mesh's pages; when a prompt finishes, ``transfer_pages``
+# re-shards exactly the written pages onto the decode sub-mesh — the
+# jax.device_put below IS the interconnect traffic the estimator's
+# ``kv_handoff_time`` charges. Block ownership never moves: the single
+# host allocator keeps page ids stable across the copy, so preempt /
+# resume / migrate stay pure table edits on both sides.
+
+def _gather_pages(src_leaf, idx):
+    """(R, P+1, ps, K, D) pool → the selected pages, all repeats."""
+    return src_leaf[:, idx]
+
+
+def _scatter_pages(dst_leaf, pages, idx):
+    return dst_leaf.at[:, idx].set(pages)
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_transfer_ops():
+    """Lazy jit so importing this module never touches jax device state
+    (the host allocator above is numpy-only and used by the simulator)."""
+    import jax
+
+    return (jax.jit(_gather_pages),
+            jax.jit(_scatter_pages, donate_argnums=(0,)))
+
+
+def transfer_pages(src_cache, dst_cache, blocks: Sequence[int],
+                   placement=None):
+    """Prefill→decode cross-mesh KV handoff: gather ``blocks`` from every
+    layer of the source page pool (on the prefill sub-mesh), re-shard them
+    via ``jax.device_put`` onto ``placement`` (the decode pool's
+    sharding), and scatter them into the destination pool in place
+    (donated). Returns the new destination cache pytree.
+
+    ``placement`` None skips the explicit re-shard (same-mesh pools —
+    useful as the single-device reference path the multidevice tests
+    compare against)."""
+    if not len(blocks):
+        return dst_cache
+    import jax
+    import jax.numpy as jnp
+
+    gather, scatter = _jitted_transfer_ops()
+    idx = jnp.asarray(np.asarray(blocks, np.int32))
+    out_blocks = []
+    for src_entry, dst_entry in zip(src_cache["blocks"], dst_cache["blocks"]):
+        new_entry = {}
+        for key, dst_leaf in dst_entry.items():
+            pages = gather(src_entry[key], idx)
+            if placement is not None:
+                pages = jax.device_put(pages, placement)
+            new_entry[key] = scatter(dst_leaf, pages, idx)
+        out_blocks.append(new_entry)
+    return {**dst_cache, "blocks": tuple(out_blocks)}

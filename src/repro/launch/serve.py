@@ -38,7 +38,8 @@ def _host(args):
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     server = BulletServer(cfg, params,
                           slo=SLO(args.slo_ttft, args.slo_tpot),
-                          max_slots=args.slots, max_len=args.max_len)
+                          max_slots=args.slots, max_len=args.max_len,
+                          partition=args.partition)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -79,7 +80,8 @@ def _replay(args):
     est = PerfEstimator(HardwareSpec(n_chips=args.chips))
     server = BulletServer(cfg, params, slo=slo, est=est,
                           max_slots=args.slots, max_len=args.max_len,
-                          refit=not args.no_refit)
+                          refit=not args.no_refit,
+                          partition=args.partition)
     trace = fit_trace_to_context(
         generate_trace(args.dataset, args.rate, args.duration,
                        seed=args.seed, max_requests=args.requests),
@@ -162,6 +164,13 @@ def main():
                          "wall second)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they stream back (replay mode)")
+    ap.add_argument("--partition", choices=("tile", "chip", "auto"),
+                    default="tile",
+                    help="partition granularity (docs/PARTITIONS.md): tile "
+                         "= fused spatial sharing on every chip; chip = "
+                         "disjoint prefill/decode sub-meshes with KV "
+                         "handoff (needs >= 2 devices); auto = per-task "
+                         "combined-table argmin")
     ap.add_argument("--no-refit", action="store_true",
                     help="pin the estimator's offline params (disable the "
                          "online refit loop; see docs/TUNING.md)")

@@ -1,0 +1,90 @@
+"""Chip-granular sub-mesh partitions (paper §3.4, second granularity).
+
+The resource manager's table holds execution states at two granularities:
+tile-granular splits share every chip spatially (one fused executable per
+quantized ``decode_share``, ``core/engine.FusedExecutable``), and
+*chip-granular* splits carve the device group itself into a disjoint
+(prefill sub-mesh, decode sub-mesh) pair — the intra-group disaggregation
+regime of Nexus / MuxServe's spatial-temporal multiplexing, where the two
+phases never contend for a chip but every finished prefill pays a
+cross-mesh KV handoff over the interconnect.
+
+This module owns the carving: a global device group becomes one
+:class:`SubMeshSplit` per quantized chip split, each side a 1-D
+``jax.sharding.Mesh`` over its own devices (axis ``"chip"``); the
+replicated per-sub-mesh param/cache placements live in
+``models/sharding.py`` (``submesh_param_sharding`` /
+``submesh_cache_sharding``). Construction touches no jax device *state*
+— meshes are plain wrappers over an explicit device list, so importing
+this module never initializes a backend.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+from jax.sharding import Mesh
+
+#: the sub-mesh axis name; 1-D by construction (chips are the partition
+#: quanta here — intra-chip tile splits are the other table granularity)
+CHIP_AXIS = "chip"
+
+
+@dataclass(frozen=True)
+class SubMeshSplit:
+    """One chip-granular partition: disjoint prefill / decode sub-meshes
+    carved from a single device group."""
+
+    prefill_chips: int
+    decode_chips: int
+    prefill_mesh: Mesh
+    decode_mesh: Mesh
+
+    @property
+    def key(self) -> tuple:
+        return (self.prefill_chips, self.decode_chips)
+
+    def __repr__(self) -> str:          # Mesh repr is huge; keep this legible
+        return (f"SubMeshSplit(prefill_chips={self.prefill_chips}, "
+                f"decode_chips={self.decode_chips})")
+
+
+def chip_mesh(devices: Sequence, axis: str = CHIP_AXIS) -> Mesh:
+    """A 1-D mesh over an explicit device list (the global group, or one
+    side of a split)."""
+    return Mesh(np.asarray(devices, dtype=object), (axis,))
+
+
+def carve_submeshes(devices: Sequence, *, quantum: int = 1,
+                    min_chips: int = 1) -> List[SubMeshSplit]:
+    """Every quantized (prefill sub-mesh, decode sub-mesh) split of
+    ``devices`` with at least ``min_chips`` on each side.
+
+    The split point walks the device list in ``quantum``-chip steps, so
+    split k gives prefill ``devices[:k]`` and decode ``devices[k:]`` —
+    disjoint by construction, covering the group exactly. Fewer than two
+    devices (or a quantum that leaves no interior point) yields an empty
+    table: chip granularity simply does not exist on that group, and the
+    caller falls back to tile-granular sharing.
+    """
+    n = len(devices)
+    out: List[SubMeshSplit] = []
+    if n < 2 * min_chips:
+        return out
+    q = max(quantum, 1)
+    for k in range(min_chips, n - min_chips + 1, q):
+        out.append(SubMeshSplit(
+            prefill_chips=k, decode_chips=n - k,
+            prefill_mesh=chip_mesh(devices[:k]),
+            decode_mesh=chip_mesh(devices[k:])))
+    return out
+
+
+def find_split(splits: Sequence[SubMeshSplit], prefill_chips: int,
+               decode_chips: int) -> Optional[SubMeshSplit]:
+    for s in splits:
+        if s.prefill_chips == prefill_chips and s.decode_chips == decode_chips:
+            return s
+    return None

@@ -128,6 +128,32 @@ def make_policy(cfg: ModelConfig, mesh: Mesh, *,
     )
 
 
+# ---------------------------------------------------------------------------
+# Per-sub-mesh placements (chip-granular partitions, launch/submesh.py)
+# ---------------------------------------------------------------------------
+
+def submesh_param_sharding(mesh: Mesh) -> NamedSharding:
+    """Parameter placement for one side of a chip-granular split: fully
+    replicated over the sub-mesh's devices. Each carved side runs its
+    phase with its own resident copy (the pre-configured execution state
+    of §3.4.2 — no cross-side traffic except the explicit KV handoff);
+    model-parallel sharding *within* a sub-mesh would come from
+    ``make_policy`` on that mesh and is deliberately not the default: the
+    equivalence contract (chip == single-mesh token streams) holds
+    trivially under replication."""
+    return NamedSharding(mesh, P())
+
+
+def submesh_cache_sharding(mesh: Mesh) -> NamedSharding:
+    """KV-page-pool placement on a sub-mesh: replicated, like the params.
+    ``jax.device_put`` from the prefill sub-mesh's pool sharding onto the
+    decode sub-mesh's is the cross-mesh page re-shard the handoff path
+    (kvcache/paged.py ``transfer_pages``) charges to the interconnect.
+    (Same placement as the params today; kept separate so sharding the
+    pool within a sub-mesh stays a one-function change.)"""
+    return NamedSharding(mesh, P())
+
+
 def with_fsdp(spec: P, policy: ShardingPolicy) -> P:
     """Try to additionally shard the first unsharded dim over data axes."""
     if not policy.fsdp or not policy.data_axes:

@@ -1,0 +1,52 @@
+"""The CI tier-1 matrix is defined by tests/shards.json (consumed by
+.github/workflows/ci.yml via fromJSON). These tests make shard drift a red
+tier-1 run instead of a silently-untested file: every tests/test_*.py must
+be claimed by exactly one tier1 shard, every claimed path must exist, and
+the workflow must actually read the shard file."""
+
+import json
+import pathlib
+from collections import Counter
+
+TESTS = pathlib.Path(__file__).resolve().parent
+REPO = TESTS.parent
+SHARDS = json.loads((TESTS / "shards.json").read_text())
+
+
+def _claimed(shards):
+    return [p for s in shards for p in s["paths"].split()]
+
+
+def test_every_test_file_claimed_by_exactly_one_shard():
+    claimed = Counter(_claimed(SHARDS["tier1"]))
+    files = sorted(f"tests/{p.name}" for p in TESTS.glob("test_*.py"))
+    dupes = sorted(p for p, n in claimed.items() if n > 1)
+    assert not dupes, f"claimed by more than one shard: {dupes}"
+    missing = sorted(set(files) - set(claimed))
+    assert not missing, (
+        f"test files not claimed by any tier1 shard (add them to "
+        f"tests/shards.json): {missing}")
+    stale = sorted(set(claimed) - set(files))
+    assert not stale, f"shards claim nonexistent files: {stale}"
+
+
+def test_shard_suites_named_uniquely():
+    names = [s["suite"] for s in SHARDS["tier1"]]
+    assert len(names) == len(set(names)), names
+
+
+def test_multidevice_paths_exist():
+    md = SHARDS["multidevice"]
+    for p in (md["paths"] + " " + md["marked"]).split():
+        assert (REPO / p).exists(), p
+
+
+def test_workflow_consumes_shard_file():
+    """The workflow must build its matrix from shards.json (fromJSON) —
+    a hand-maintained path list in the YAML is the drift this file
+    exists to kill."""
+    wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    assert "tests/shards.json" in wf
+    assert "fromJSON(needs.shards.outputs.tier1)" in wf
+    assert "tier1-multidevice" in wf
+    assert "xla_force_host_platform_device_count=8" in wf

@@ -1,0 +1,343 @@
+"""Chip-granular sub-mesh partitions (§3.4 second granularity).
+
+Single-device half: partition-descriptor table keying (the collision
+regression), KV-handoff charging, and the scheduler's combined-table
+argmin — chip wins exactly when modeled handoff cost undercuts modeled
+co-location contention. Multi-device half (@pytest.mark.multidevice, run
+by the CI tier1-multidevice job under an 8-device forced host platform):
+sub-mesh carving invariants and the acceptance property — prefill on
+sub-mesh A, jax.device_put KV handoff, decode on sub-mesh B produces
+token streams identical to the single-mesh fused engine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import analytics as A
+from repro.core.engine import BulletServer, ChipExecutable
+from repro.core.estimator import (CycleObservation, EstimatorParams,
+                                  HardwareSpec, PerfEstimator, predict_cycle)
+from repro.core.metadata import (DecodeStatus, PrefillStatus, ResourceStatus,
+                                 SystemState)
+from repro.core.resource import ResourceManager
+from repro.core.scheduler import SchedulerConfig, SLOScheduler
+from repro.launch.submesh import carve_submeshes, find_split
+from repro.serving.request import Request, SLO
+
+KEY = jax.random.PRNGKey(0)
+
+#: estimator regimes for the argmin tests: co-location contention priced
+#: punitively + near-free interconnect (chip must win), and contention
+#: priced away + starved interconnect (tile must win)
+EST_CHEAP_HANDOFF = PerfEstimator(HardwareSpec(ici_bw=1e13),
+                                  EstimatorParams(p_c=0.5, p_b=0.5))
+EST_DEAR_HANDOFF = PerfEstimator(HardwareSpec(ici_bw=1e6),
+                                 EstimatorParams(p_c=1.0, p_b=1.0))
+
+
+def mixed_state(n_tokens=2048, n_d=8, ctx=512) -> SystemState:
+    s = SystemState()
+    s.prefill = PrefillStatus(active_rid=0, layers_done=0, total_layers=28,
+                              n_tokens=n_tokens)
+    s.decode = DecodeStatus(batch=list(range(n_d)), mean_context=ctx,
+                            ctx_tokens=ctx * n_d)
+    return s
+
+
+def mk_scheduler(est, cfg=None, chip_splits=((1, 3), (2, 2), (3, 1))):
+    cfg = cfg or get_config("qwen3-1.7b")
+    rm = ResourceManager(est.hw, 2, chip_splits=list(chip_splits))
+    sched = SLOScheduler(cfg, est, SLO(3.0, 150.0), SchedulerConfig())
+    sched.split_candidates = [(p.prefill_units, p.decode_units)
+                              for p in rm.tile_entries]
+    sched.partition_table = rm.partitions
+    return sched, rm
+
+
+# ---------------------------------------------------------------------------
+# partition-descriptor table keying (the nearest() collision regression)
+# ---------------------------------------------------------------------------
+
+def test_chip_and_tile_entries_with_same_units_stay_distinct():
+    """Regression: a 2+2-chip split of a 4-chip machine projects to
+    (16, 16) units — the same unit split as a tile table entry. The old
+    units-keyed table collapsed them (nearest() quantized prefill_units
+    and tie-broke by config_id); the descriptor key must keep both."""
+    hw = HardwareSpec()                     # 4 chips x 8 units
+    rm = ResourceManager(hw, 2, chip_splits=[(1, 3), (2, 2), (3, 1)])
+    tile_status = ResourceStatus(16, 16)
+    chip_status = ResourceStatus(16, 16, granularity="chip",
+                                 prefill_chips=2, decode_chips=2)
+    assert rm.on_table(tile_status) and rm.on_table(chip_status)
+    tile_part = rm.nearest(tile_status)
+    chip_part = rm.nearest(chip_status)
+    assert tile_part.config_id != chip_part.config_id
+    assert tile_part.granularity == "tile" and tile_part.prefill_chips == 0
+    assert chip_part.granularity == "chip" and chip_part.prefill_chips == 2
+    # and the unit projections really do coincide — the collision is real
+    assert (tile_part.prefill_units, tile_part.decode_units) == \
+        (chip_part.prefill_units, chip_part.decode_units) == (16, 16)
+
+
+def test_chip_nearest_snaps_within_granularity():
+    hw = HardwareSpec()
+    rm = ResourceManager(hw, 2, chip_splits=[(1, 3), (2, 2), (3, 1)])
+    # an off-table chip request snaps to the closest chip entry, never a
+    # tile one
+    got = rm.nearest(ResourceStatus(30, 2, granularity="chip",
+                                    prefill_chips=4, decode_chips=0))
+    assert got.granularity == "chip" and got.prefill_chips == 3
+    # tile requests keep the quantize-then-snap behavior and never land
+    # on a chip entry
+    got = rm.nearest(ResourceStatus(17, 15))
+    assert got.granularity == "tile"
+    # switching onto a chip entry is still the instant table lookup
+    part = rm.switch(ResourceStatus(8, 24, granularity="chip",
+                                    prefill_chips=1, decode_chips=3))
+    assert rm.current is part and part.granularity == "chip"
+
+
+def test_descriptor_keys_unique_across_table():
+    hw = HardwareSpec()
+    rm = ResourceManager(hw, 2, chip_splits=[(1, 3), (2, 2), (3, 1)])
+    keys = [p.key for p in rm.partitions]
+    assert len(keys) == len(set(keys))
+    assert len(rm.chip_entries) == 3
+    assert rm.partitions == rm.tile_entries + rm.chip_entries
+
+
+# ---------------------------------------------------------------------------
+# KV-handoff charging
+# ---------------------------------------------------------------------------
+
+def test_kv_handoff_time_is_bytes_over_ici_bw():
+    cfg = get_config("qwen3-1.7b")
+    est = PerfEstimator(HardwareSpec(ici_bw=50e9))
+    n = 4096
+    want = A.kv_transfer_bytes(cfg, n) / 50e9
+    assert est.kv_handoff_time(cfg, n) == pytest.approx(want)
+    assert est.kv_handoff_time(cfg, 0) == 0.0
+    assert est.kv_handoff_time(cfg, 2 * n) == pytest.approx(2 * want)
+
+
+def test_chip_cycle_time_is_uncontended_max_plus_handoff():
+    cfg = get_config("qwen3-1.7b")
+    est = PerfEstimator()
+    U = est.hw.total_units
+    n_tok, batch, ctx = 4096, 16, 1024
+    lg = len(cfg.pattern)
+    t_p = est.prefill_layer_time(cfg, n_tok, 0, U // 2, colocated=False) * lg
+    t_d = est.decode_iter_time(cfg, batch, ctx, U // 2, colocated=False)
+    base = est.chip_cycle_time(cfg, n_tok, U // 2, U // 2, batch, ctx)
+    assert base == pytest.approx(max(t_p, t_d))
+    with_handoff = est.chip_cycle_time(cfg, n_tok, U // 2, U // 2, batch,
+                                       ctx, handoff_tokens=n_tok)
+    assert with_handoff == pytest.approx(
+        max(t_p, t_d) + est.kv_handoff_time(cfg, n_tok))
+    # one-sided cycles degrade to the single phase's time
+    assert est.chip_cycle_time(cfg, n_tok, U // 2, U // 2, 0, 1) == \
+        pytest.approx(t_p)
+
+
+def test_predict_cycle_routes_chip_kind():
+    cfg = get_config("qwen3-1.7b")
+    est = PerfEstimator()
+    obs = CycleObservation("chip", 1024, 16, 16, 4, 256,
+                           handoff_tokens=1024)
+    assert predict_cycle(est, cfg, obs) == pytest.approx(
+        est.chip_cycle_time(cfg, 1024, 16, 16, 4, 256,
+                            handoff_tokens=1024))
+    # the handoff term is visible in the charge
+    free = CycleObservation("chip", 1024, 16, 16, 4, 256)
+    assert predict_cycle(est, cfg, obs) > predict_cycle(est, cfg, free)
+
+
+# ---------------------------------------------------------------------------
+# combined-table argmin (acceptance: chip wins iff handoff < contention)
+# ---------------------------------------------------------------------------
+
+def test_argmin_selects_chip_iff_handoff_beats_contention():
+    state = mixed_state()
+    sched_cheap, _ = mk_scheduler(EST_CHEAP_HANDOFF)
+    gran, _ = sched_cheap.combined_argmin(state)
+    assert gran == "chip"
+    assert sched_cheap.preferred_granularity(state) == "chip"
+    sched_dear, _ = mk_scheduler(EST_DEAR_HANDOFF)
+    gran, _ = sched_dear.combined_argmin(state)
+    assert gran == "tile"
+    assert sched_dear.preferred_granularity(state) == "tile"
+    # the argmin is literally the handoff-vs-contention comparison: the
+    # winning chip cycle undercuts the best fused (contended) cycle in
+    # one regime and not the other
+    for sched, want_chip in ((sched_cheap, True), (sched_dear, False)):
+        total = sched.est.hw.total_units
+        _, chip_ms = sched._chip_split_search(state, float("inf"))
+        tile_ms = min(sched._fused_cycle_ms(state, u, v)
+                      for u, v in sched._fused_candidates(total))
+        assert (chip_ms < tile_ms) == want_chip
+
+
+def test_argmin_needs_both_phases_resident():
+    sched, _ = mk_scheduler(EST_CHEAP_HANDOFF)
+    no_decode = mixed_state(n_d=0)
+    no_prefill = mixed_state(n_tokens=0)
+    assert sched.combined_argmin(no_decode) is None
+    assert sched.combined_argmin(no_prefill) is None
+    assert sched.preferred_granularity(no_decode) == "tile"
+
+
+def test_chip_schedule_decision_is_on_table_and_never_pauses():
+    for est in (EST_CHEAP_HANDOFF, EST_DEAR_HANDOFF):
+        sched, rm = mk_scheduler(est)
+        d = sched.schedule(mixed_state(), 0.0, [], granularity="chip")
+        assert d.resources.granularity == "chip"
+        assert rm.on_table(d.resources)
+        assert not d.pause_decode
+        # single-phase cycles of a chip-pinned task stay on chip entries
+        d = sched.schedule(mixed_state(n_d=0), 0.0, [], granularity="chip")
+        assert d.resources.granularity == "chip"
+        assert rm.on_table(d.resources)
+
+
+def test_tile_schedule_unaffected_by_chip_table():
+    """Without the granularity restriction the Algorithm 1/2 pipeline
+    must keep proposing tile entries even when chip entries exist."""
+    sched, rm = mk_scheduler(EST_CHEAP_HANDOFF)
+    d = sched.schedule(mixed_state(), 0.0, [])
+    assert d.resources.granularity == "tile"
+    assert rm.on_table(d.resources)
+
+
+# ---------------------------------------------------------------------------
+# sub-mesh carving + real chip execution (multidevice)
+# ---------------------------------------------------------------------------
+
+def test_carve_single_device_yields_no_chip_table():
+    assert carve_submeshes(jax.devices()[:1]) == []
+
+
+@pytest.mark.multidevice
+def test_carve_submeshes_disjoint_and_covering(chip_devices):
+    splits = carve_submeshes(chip_devices)
+    n = len(chip_devices)
+    assert len(splits) == n - 1
+    for s in splits:
+        p = list(s.prefill_mesh.devices.flat)
+        d = list(s.decode_mesh.devices.flat)
+        assert len(p) == s.prefill_chips and len(d) == s.decode_chips
+        assert s.prefill_chips + s.decode_chips == n
+        assert not set(map(id, p)) & set(map(id, d))          # disjoint
+        assert [*p, *d] == list(chip_devices)                 # covering
+    assert find_split(splits, 1, n - 1) is splits[0]
+    assert find_split(splits, n, 0) is None
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    from repro.models import init_params
+    params = init_params(cfg, KEY, jnp.float32)
+    return cfg, params
+
+
+def mk_server(cfg, params, **kw):
+    kw.setdefault("slo", SLO(3.0, 150.0))
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("max_prefill_batch", 1)
+    kw.setdefault("sched", SchedulerConfig(max_decode_pause_cycles=0))
+    return BulletServer(cfg, params, **kw)
+
+
+def submit_batch(server, cfg, n=6, seed=0, out_len=8):
+    rng = np.random.default_rng(seed)
+    for rid in range(n):
+        plen = int(rng.integers(4, 16))
+        server.submit(Request(rid=rid, arrival=0.0, prompt_len=plen,
+                              output_len=out_len),
+                      rng.integers(0, cfg.vocab_size, plen))
+
+
+@pytest.mark.multidevice
+def test_chip_engine_matches_single_mesh_fused_engine(setup, chip_devices):
+    """Acceptance: prefill on sub-mesh A, device_put KV handoff, decode on
+    sub-mesh B — token streams identical to the single-mesh fused engine,
+    with chip cycles and handoffs actually executed."""
+    cfg, params = setup
+    for seed in (0, 5):
+        fused = mk_server(cfg, params)                     # single-mesh
+        chip = mk_server(cfg, params, partition="chip",
+                         devices=chip_devices[:2])
+        assert chip._chip_enabled and chip.rm.chip_entries
+        submit_batch(fused, cfg, seed=seed)
+        submit_batch(chip, cfg, seed=seed)
+        out_f = fused.run()
+        out_c = chip.run()
+        assert out_c == out_f, seed
+        assert chip.stats.chip_cycles > 0
+        assert chip.stats.handoffs > 0
+        assert chip.stats.fused_cycles == 0                # pinned chip
+        chip.pool.check_invariants()
+        assert chip.pool.free_blocks == chip.pool.n_blocks
+
+
+@pytest.mark.multidevice
+def test_chip_engine_on_wider_submeshes(setup, chip_devices):
+    """Same equivalence on asymmetric splits of the full device group
+    (the 8-device CI mesh carves 7 splits; scheduling walks them)."""
+    cfg, params = setup
+    fused = mk_server(cfg, params)
+    chip = mk_server(cfg, params, partition="chip", devices=chip_devices)
+    assert len(chip.rm.chip_entries) == len(chip_devices) - 1
+    submit_batch(fused, cfg, n=4, seed=3)
+    submit_batch(chip, cfg, n=4, seed=3)
+    assert chip.run() == fused.run()
+    assert chip.stats.chip_cycles > 0 and chip.stats.handoffs > 0
+
+
+@pytest.mark.multidevice
+def test_auto_partition_argmin_drives_execution(setup, chip_devices):
+    """partition="auto": the combined-table argmin decides per task.
+    Under punitive contention + free interconnect every co-resident task
+    runs chip-granular; in the opposite regime none does — and both
+    regimes reproduce the single-mesh streams."""
+    cfg, params = setup
+    reference = mk_server(cfg, params)
+    submit_batch(reference, cfg)
+    out_ref = reference.run()
+    for est, want_chip in ((EST_CHEAP_HANDOFF, True),
+                           (EST_DEAR_HANDOFF, False)):
+        server = mk_server(cfg, params, partition="auto", est=est,
+                           devices=chip_devices[:2])
+        submit_batch(server, cfg)
+        out = server.run()
+        assert out == out_ref
+        if want_chip:
+            assert server.stats.chip_cycles > 0
+        else:
+            assert server.stats.chip_cycles == 0
+            assert server.stats.fused_cycles > 0
+
+
+@pytest.mark.multidevice
+def test_chip_executables_prebuilt_and_reused(setup, chip_devices):
+    """Chip entries hold pre-built pjit pairs; switching is a table
+    lookup that never rebuilds them (the libsmctrl-swap analogue at chip
+    granularity)."""
+    cfg, params = setup
+    server = mk_server(cfg, params, partition="chip",
+                       devices=chip_devices[:4])
+    chip_execs = {cid: e for cid, e in server.rm._exec.items()
+                  if isinstance(e, ChipExecutable)}
+    assert len(chip_execs) == 3
+    for part in server.rm.chip_entries:
+        ex = server.rm.executable(part)
+        assert isinstance(ex, ChipExecutable)
+        assert ex.split.prefill_chips == part.prefill_chips
+    submit_batch(server, cfg, n=4, seed=1)
+    server.run()
+    assert all(server.rm._exec[cid] is e for cid, e in chip_execs.items())
+    assert server.stats.chip_cycles > 0
