@@ -1,0 +1,151 @@
+"""Observability overhead gate: instrumented vs uninstrumented replay.
+
+The obs layer (docs/OBSERVABILITY.md) promises near-zero cost when
+disabled and < 5% wall-time overhead when fully enabled (metrics +
+spans + cycle trace). This bench holds it to that: the same virtual-
+clock replay runs with ``obs=None`` (the NULL_OBS fast path) and with
+``obs=Observability()``, alternating A/B repeats after a warmup pass so
+jit compiles and allocator warmup land on neither side, and the median
+wall times are compared.
+
+Artifacts (uploaded by the CI bench-smoke job):
+
+- ``BENCH_obs_overhead.json`` — the timing table and headline ratio;
+- ``BENCH_replay_trace.json`` — the enabled run's Chrome trace-event
+  JSON (open in https://ui.perfetto.dev), with every cycle event
+  carrying both predicted and actual durations.
+
+``REPRO_SMOKE=1`` shrinks the replay for the CI smoke step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import statistics
+import time
+
+import numpy as np
+
+JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_obs_overhead.json"
+TRACE_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_replay_trace.json"
+
+#: allowed enabled/disabled median ratio (the documented < 5% budget),
+#: plus an absolute slack floor so µs-scale smoke replays don't gate on
+#: host timer noise
+MAX_RATIO = 1.05
+ABS_SLACK_S = 0.05
+
+
+def _build(trace, prompts, cfg, params, *, obs):
+    import jax  # noqa: F401  (engine imports expect a live backend)
+
+    from repro.core.engine import BulletServer
+    from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                        estimator_cycle_cost)
+    from repro.serving.request import Request, WORKLOAD_SLOS
+
+    server = BulletServer(cfg, params, slo=WORKLOAD_SLOS["sharegpt"],
+                          max_slots=4, max_len=48, max_prefill_batch=1,
+                          obs=obs)
+    fe = OnlineFrontend(server, VirtualClock(),
+                        cycle_cost=estimator_cycle_cost)
+    for r in trace:
+        fe.submit(Request(rid=r.rid, arrival=r.arrival,
+                          prompt_len=r.prompt_len,
+                          output_len=r.output_len), prompts[r.rid])
+    return server, fe
+
+
+def run(emit) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.obs import Observability
+    from repro.serving.workload import fit_trace_to_context, generate_trace
+
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    repeats = 3 if smoke else 5
+    n_req = 6 if smoke else 16
+
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    trace = fit_trace_to_context(
+        generate_trace("sharegpt", 400.0, 1.0, seed=3, max_requests=n_req),
+        48)
+    for r in trace:
+        r.arrival *= 1e-2
+    prompts = {r.rid: np.random.default_rng(r.rid).integers(
+        0, cfg.vocab_size, r.prompt_len, dtype=np.int32) for r in trace}
+
+    def replay(enabled: bool):
+        obs = Observability() if enabled else None
+        server, fe = _build(trace, prompts, cfg, params, obs=obs)
+        t0 = time.perf_counter()
+        m = fe.run()
+        return time.perf_counter() - t0, server, m
+
+    # warmup: populate the module-level jit caches so neither side pays
+    # compile time inside the measured window
+    replay(True)
+
+    times = {"disabled": [], "enabled": []}
+    outputs = {}
+    last_enabled_server = None
+    emit("# obs_overhead: side,rep,wall_s")
+    for rep in range(repeats):
+        for enabled in (False, True):
+            side = "enabled" if enabled else "disabled"
+            dt, server, _ = replay(enabled)
+            times[side].append(dt)
+            outputs[side] = dict(server.outputs)
+            if enabled:
+                last_enabled_server = server
+            emit(f"obs_overhead,{side},{rep},{dt:.4f}")
+
+    assert outputs["disabled"] == outputs["enabled"], \
+        "instrumentation changed the token streams"
+
+    med_off = statistics.median(times["disabled"])
+    med_on = statistics.median(times["enabled"])
+    ratio = med_on / max(med_off, 1e-9)
+    budget = med_off * MAX_RATIO + ABS_SLACK_S
+    emit(f"obs_overhead-headline,median_disabled_s={med_off:.4f},"
+         f"median_enabled_s={med_on:.4f},ratio={ratio:.3f}")
+    assert med_on <= budget, (
+        f"enabled tracing overhead {ratio:.3f}x exceeds the "
+        f"{MAX_RATIO:.2f}x (+{ABS_SLACK_S}s slack) budget")
+
+    # export the enabled run's trace as the workflow artifact, and sanity
+    # check the promise the docs make: cycle slices carry both durations
+    doc = last_enabled_server.obs.chrome_trace()
+    cyc = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert cyc and all("predicted_ms" in e["args"] and
+                       e["args"]["actual_ms"] is not None for e in cyc), \
+        "replay cycle events must carry predicted and actual durations"
+    TRACE_PATH.write_text(json.dumps(doc))
+    emit(f"obs_overhead,trace_written,{TRACE_PATH.name},"
+         f"{len(doc['traceEvents'])}_events")
+
+    payload = {
+        "benchmark": "obs_overhead",
+        "smoke": smoke,
+        "repeats": repeats,
+        "requests": len(trace),
+        "wall_s": times,
+        "headline": {
+            "median_disabled_s": med_off,
+            "median_enabled_s": med_on,
+            "ratio": ratio,
+            "budget_ratio": MAX_RATIO,
+            "identical_streams": True,
+            "trace_events": len(doc["traceEvents"]),
+        },
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True))
+    emit(f"obs_overhead,json_written,{JSON_PATH.name}")

@@ -24,6 +24,7 @@ BENCHES = [
     ("kernels", "benchmarks.kernel_bench"),
     ("paged_decode", "benchmarks.paged_decode_attention"),
     ("fused_vs_serial", "benchmarks.fused_vs_serial"),
+    ("obs_overhead", "benchmarks.obs_overhead"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 

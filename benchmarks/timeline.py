@@ -1,9 +1,59 @@
 """Paper Fig. 12: timeline of dynamic SM (unit) provisioning on Azure-Code —
-prefill allocation spikes on bursts, decode resumes after."""
+prefill allocation spikes on bursts, decode resumes after.
+
+Two sections: the original estimator-driven simulator timeline
+(``fig12,...`` rows), and the same picture read off the REAL engine —
+a small virtual-clock replay with the observability layer enabled
+(docs/OBSERVABILITY.md), one ``fig12-real,...`` row per engine cycle
+straight from its ``CycleTrace``."""
 
 import numpy as np
 
 from benchmarks.common import simulate
+
+
+def _real_engine_rows(emit) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.engine import BulletServer
+    from repro.models import init_params
+    from repro.obs import Observability
+    from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                        estimator_cycle_cost)
+    from repro.serving.request import WORKLOAD_SLOS
+    from repro.serving.workload import fit_trace_to_context, generate_trace
+
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    server = BulletServer(cfg, params, slo=WORKLOAD_SLOS["azure-code"],
+                          max_slots=4, max_len=48, max_prefill_batch=1,
+                          obs=Observability())
+    trace = fit_trace_to_context(
+        generate_trace("azure-code", 400.0, 1.0, seed=4, max_requests=8),
+        48)
+    for r in trace:
+        r.arrival *= 1e-2
+    fe = OnlineFrontend(server, VirtualClock(),
+                        cycle_cost=estimator_cycle_cost)
+    fe.submit_trace(trace, cfg.vocab_size, seed=4)
+    fe.run()
+
+    emit("# fig12-real: t_s,kind,prefill_units,decode_units,"
+         "prefill_tokens,decode_batch,predicted_ms,actual_ms,"
+         "kv_occupancy,reason")
+    events = list(server.obs.trace)
+    for ev in events:
+        actual = f"{ev.actual_s*1e3:.4f}" if ev.actual_s is not None else ""
+        emit(f"fig12-real,{ev.t:.5f},{ev.kind},{ev.prefill_units},"
+             f"{ev.decode_units},{ev.prefill_tokens},{ev.decode_batch},"
+             f"{ev.predicted_s*1e3:.4f},{actual},{ev.kv_occupancy:.3f},"
+             f"{ev.reason}")
+    kinds = sorted({ev.kind for ev in events})
+    emit(f"fig12-real-summary,cycles={len(events)},"
+         f"kinds={'/'.join(kinds)},"
+         f"peak_kv_occupancy={max(ev.kv_occupancy for ev in events):.3f}")
 
 
 def run(emit) -> None:
@@ -30,3 +80,4 @@ def run(emit) -> None:
     units = sorted({e.prefill_units for e in log})
     emit(f"fig12-summary,distinct_prefill_allocations,{len(units)}")
     emit(f"fig12-summary,mean_queue_ms,{m.mean_queue_s*1e3:.1f}")
+    _real_engine_rows(emit)

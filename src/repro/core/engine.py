@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import analytics
 from repro.core.estimator import (CycleObservation, OnlineRefitter,
                                   PerfEstimator, predict_cycle)
 from repro.core.metadata import MetadataBuffer
@@ -48,6 +49,7 @@ from repro.kvcache.paged import PagedKVPool, transfer_pages
 from repro.launch.submesh import (SubMeshSplit, carve_submeshes, chip_mesh,
                                   find_split)
 from repro.models import transformer as T
+from repro.obs import NULL_OBS, CycleEvent, Observability
 from repro.models.sharding import (submesh_cache_sharding,
                                    submesh_param_sharding)
 from repro.serving.request import Phase, Request, SLO
@@ -281,7 +283,8 @@ class BulletServer:
                  dtype=jnp.float32, paged: Optional[bool] = None,
                  page_size: int = 16, fused: Optional[bool] = None,
                  refit=None, refit_interval: int = 32,
-                 partition: str = "tile", devices=None):
+                 partition: str = "tile", devices=None,
+                 obs: Optional[Observability] = None):
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -295,6 +298,14 @@ class BulletServer:
         self.max_len = max_len
         self.max_prefill_batch = max_prefill_batch
         self.stats = EngineStats()
+        #: observability sink (docs/OBSERVABILITY.md): metrics registry +
+        #: request spans + cycle trace. NULL_OBS (disabled) by default —
+        #: every hook below is gated on ``self.obs.enabled``, so the
+        #: uninstrumented hot path pays one attribute check per cycle.
+        self.obs = obs if obs is not None else NULL_OBS
+        #: the cycle event awaiting its measured duration (the driver's
+        #: record_cycle_actual completes it)
+        self._open_cycle: Optional[CycleEvent] = None
         self.pool = PagedKVPool(max_slots * max_len, block_size=page_size)
         if paged is None:
             paged = T.supports_paged_cache(cfg)
@@ -342,6 +353,7 @@ class BulletServer:
         # mode: serial dispatches never co-locate phases spatially
         sched = replace(sched, fused=fused)
         self.scheduler = SLOScheduler(cfg, self.est, slo, sched)
+        self.scheduler.obs = self.obs
         # pre-build one execution state per partition (§3.4.2) so _switch
         # selects among real execution states, not just numbers: fused
         # executables for the tile half, pjit pairs for the chip half
@@ -571,6 +583,11 @@ class BulletServer:
         req.phase = Phase.QUEUED
         req._prompt = np.asarray(prompt_tokens, np.int32)   # type: ignore
         self.pending.append(req)
+        if self.obs.enabled:
+            self.obs.requests_submitted.inc()
+            self.obs.spans.mark(req.rid, "submit", req.arrival,
+                                prompt_len=req.prompt_len,
+                                output_len=req.output_len)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slot_req):
@@ -649,6 +666,9 @@ class BulletServer:
         victim.phase = Phase.QUEUED
         self.pending.append(victim)
         self.stats.preempted += 1
+        if self.obs.enabled:
+            self.obs.spans.mark(victim.rid, "preempt", now,
+                                generated=float(victim.generated))
         D = self.buffer.state.decode
         if victim.rid in D.batch:
             D.batch.remove(victim.rid)
@@ -699,6 +719,13 @@ class BulletServer:
             self.slot_req[slot] = r
             r._slot = slot                                  # type: ignore
             self.buffer.state.prefill.queue_wait[r.rid] = now - r.arrival
+            if self.obs.enabled:
+                # a request with a generated prefix re-enters after a
+                # preemption: its span resumes instead of re-admitting
+                self.obs.spans.mark(
+                    r.rid,
+                    "resume" if self.outputs.get(r.rid) else "admit",
+                    now, queue_s=max(0.0, now - r.arrival))
         if not batch:
             return False
 
@@ -805,6 +832,9 @@ class BulletServer:
         P.layers_done = task.rep * len(self.cfg.pattern)
         for r in task.batch:
             r.prefill_done_layers = P.layers_done
+            if self.obs.enabled:
+                self.obs.spans.mark(r.rid, "prefill_group", now,
+                                    rep=float(task.rep - 1))
         if task.rep >= self.cfg.n_pattern_repeats:
             self._finish_prefill(task, now)
             self.ptask = None
@@ -830,6 +860,10 @@ class BulletServer:
                                         self._decode_sharding)
             self.stats.handoffs += len(task.batch)
             self.last_handoff_tokens += int(lens.sum())
+            if self.obs.enabled:
+                for i, r in enumerate(task.batch):
+                    self.obs.spans.mark(r.rid, "handoff", now,
+                                        tokens=float(lens[i]))
         P = self.buffer.state.prefill
         if self.paged:
             # migrated slots flip PREFILL->DECODE: re-map their pages into
@@ -860,6 +894,10 @@ class BulletServer:
             self.active = self.active.at[slot].set(True)
             self.pool.migrate(r.rid)
             self.stats.migrated += 1
+            if self.obs.enabled:
+                self.obs.spans.mark(r.rid, "migrate", now)
+                if prefix is None:
+                    self.obs.spans.mark(r.rid, "first_token", now)
             self.buffer.write(lambda s, rid=r.rid: s.ready_for_decode.append(
                 (rid, self.outputs[rid][-1])))
             if self.on_token is not None:
@@ -876,6 +914,10 @@ class BulletServer:
         r.phase = Phase.FINISHED
         r.finish_time = now
         self.finished.append(r)
+        if self.obs.enabled:
+            self.obs.requests_finished.inc()
+            self.obs.spans.mark(r.rid, "finish", now,
+                                generated=float(r.generated))
         self.pool.free(r.rid)
         if self.paged:
             self._tables_dirty = True
@@ -1137,6 +1179,9 @@ class BulletServer:
             return
         pred = predict_cycle(self.est, self.cfg, obs)
         self.pred_actual.append((obs.kind, pred, actual_s))
+        if self.obs.enabled and self._open_cycle is not None:
+            self.obs.complete_cycle(self._open_cycle, actual_s)
+            self._open_cycle = None
         if self.refitter is not None:
             self.refitter.observe(obs, actual_s)
             self._obs_since_refit += 1
@@ -1160,6 +1205,41 @@ class BulletServer:
             self.stats.refits += 1
             self.refit_log.append(len(self.pred_actual))
 
+    # -- observability (docs/OBSERVABILITY.md) ----------------------------
+    def _record_cycle_event(self, now: float) -> None:
+        """Append the cycle that step() just executed to the structured
+        trace: kind, the partition descriptor that ran, predicted
+        duration (the actual arrives via record_cycle_actual), handoff
+        bytes, KV-pool occupancy, and the scheduler's decision rationale.
+        No-op when the step ran no device work."""
+        self._open_cycle = None
+        rec = self.last_cycle_observation()
+        if rec is None:
+            return
+        R = self.buffer.state.resources
+        d = self.scheduler.last_decision
+        ev = CycleEvent(
+            t=now, kind=rec.kind,
+            predicted_s=predict_cycle(self.est, self.cfg, rec),
+            config_id=R.config_id, granularity=R.granularity,
+            prefill_units=R.prefill_units, decode_units=R.decode_units,
+            prefill_chips=R.prefill_chips, decode_chips=R.decode_chips,
+            prefill_tokens=self.last_prefill_tokens,
+            decode_batch=(self.last_decode.batch
+                          if self.last_decode is not None else 0),
+            handoff_tokens=self.last_handoff_tokens,
+            handoff_bytes=int(analytics.kv_transfer_bytes(
+                self.cfg, self.last_handoff_tokens))
+            if self.last_handoff_tokens else 0,
+            kv_used_blocks=self.pool.allocated_blocks,
+            kv_total_blocks=self.pool.n_blocks,
+            kv_occupancy=self.pool.occupancy(),
+            kv_fragmentation=self.pool.fragmentation(),
+            paused=self.buffer.state.decode.paused,
+            reason=d.reason if d is not None else "")
+        self.obs.record_cycle(ev)
+        self._open_cycle = ev
+
     # -- main loop --------------------------------------------------------
     def step(self, now: float) -> bool:
         """One engine cycle at time ``now``: admit newly-pending prompts,
@@ -1169,6 +1249,12 @@ class BulletServer:
         otherwise. Returns True if any engine did work. Drive this from an
         online frontend (serving.frontend) or via :meth:`run` for offline
         batches."""
+        did = self._step_inner(now)
+        if self.obs.enabled:
+            self._record_cycle_event(now)
+        return did
+
+    def _step_inner(self, now: float) -> bool:
         self._maybe_refit()
         self.last_prefill_tokens = 0
         self.last_decode = None

@@ -104,6 +104,13 @@ class SLOScheduler:
         #: a KV-handoff charge (docs/PARTITIONS.md) — the
         #: disaggregation-vs-sharing tradeoff as one table argmin.
         self.partition_table: Optional[List] = None
+        #: observability sink (repro.obs.Observability); the engine wires
+        #: its own instance in so decision rationale / pause-gate firings
+        #: land in the same registry as the cycle trace. None = silent.
+        self.obs = None
+        #: the most recent Decision returned by schedule() — the engine's
+        #: cycle trace reads its ``reason`` as the scheduler rationale
+        self.last_decision: Optional[Decision] = None
 
     # -- progress tracking (Algorithm 1 lines 2-10) -------------------
     def estimate_ttfts(self, state: SystemState, now: float,
@@ -497,4 +504,7 @@ class SLOScheduler:
             self.decode_paused_cycles += 1
         else:
             self.decode_paused_cycles = 0
+        self.last_decision = d
+        if self.obs is not None and self.obs.enabled:
+            self.obs.on_decision(d, ttft_vio, tpot_vio)
         return d

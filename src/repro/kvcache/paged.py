@@ -37,6 +37,18 @@ class PageTable:
     n_tokens: int = 0
 
 
+@dataclass
+class PoolOps:
+    """Always-on operation counters (allocator events, not block counts)
+    absorbed into the metrics registry by Observability.sync_engine_stats
+    — table mutations are host-side bookkeeping, so counting them here is
+    free and keeps the allocator zero-dependency."""
+    allocs: int = 0
+    extends: int = 0
+    frees: int = 0
+    preempts: int = 0
+
+
 class PagedKVPool:
     def __init__(self, total_tokens: int, block_size: int = 16):
         assert block_size > 0 and total_tokens >= block_size
@@ -44,11 +56,30 @@ class PagedKVPool:
         self.n_blocks = total_tokens // block_size
         self._free: List[int] = list(range(self.n_blocks))
         self._tables: Dict[int, PageTable] = {}
+        self.ops = PoolOps()
 
     # -- capacity ------------------------------------------------------
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def occupancy(self) -> float:
+        """Fraction of pool blocks currently allocated to requests."""
+        return self.allocated_blocks / max(self.n_blocks, 1)
+
+    def fragmentation(self) -> float:
+        """Internal fragmentation: the fraction of allocated block
+        capacity not (yet) covered by tokens — reservation-ahead slack
+        plus last-block padding. 0 when nothing is allocated."""
+        cap = self.allocated_blocks * self.block_size
+        if cap <= 0:
+            return 0.0
+        used = sum(t.n_tokens for t in self._tables.values())
+        return max(0.0, 1.0 - used / cap)
 
     @property
     def free_tokens(self) -> int:
@@ -75,6 +106,7 @@ class PagedKVPool:
         table = PageTable(rid, [self._free.pop() for _ in range(need)],
                           n_tokens)
         self._tables[rid] = table
+        self.ops.allocs += 1
         return table
 
     def extend(self, rid: int, n_new_tokens: int = 1) -> PageTable:
@@ -87,6 +119,7 @@ class PagedKVPool:
         for _ in range(need):
             table.blocks.append(self._free.pop())
         table.n_tokens = new_total
+        self.ops.extends += 1
         return table
 
     def migrate(self, rid: int) -> PageTable:
@@ -101,6 +134,8 @@ class PagedKVPool:
         reserves fresh blocks for prompt + prefix + remaining output."""
         table = self._tables.get(rid)
         held = table.n_tokens if table is not None else 0
+        if table is not None:
+            self.ops.preempts += 1
         self.free(rid)
         return held
 
@@ -112,6 +147,7 @@ class PagedKVPool:
         self._free.extend(table.blocks)
         n = len(table.blocks)
         table.blocks = []
+        self.ops.frees += 1
         return n
 
     def table(self, rid: int) -> Optional[PageTable]:

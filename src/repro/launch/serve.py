@@ -25,6 +25,17 @@ import argparse
 import sys
 
 
+def _write_obs_outputs(args, server) -> None:
+    """Shared --trace-out / --metrics-out export for host and replay."""
+    if args.trace_out:
+        server.obs.write_trace(args.trace_out)
+        print(f"wrote Chrome trace ({len(server.obs.trace)} cycles) to "
+              f"{args.trace_out} (open in https://ui.perfetto.dev)")
+    if args.metrics_out:
+        server.obs.write_metrics(args.metrics_out, server=server)
+        print(f"wrote metrics snapshot to {args.metrics_out}")
+
+
 def _host(args):
     import jax
     import jax.numpy as jnp
@@ -32,6 +43,8 @@ def _host(args):
     from repro.configs import get_config
     from repro.core.engine import BulletServer
     from repro.models import init_params
+    from repro.obs import Observability
+    from repro.obs.report import run_report
     from repro.serving.request import Request, SLO
 
     cfg = get_config(args.arch).reduced()
@@ -39,7 +52,7 @@ def _host(args):
     server = BulletServer(cfg, params,
                           slo=SLO(args.slo_ttft, args.slo_tpot),
                           max_slots=args.slots, max_len=args.max_len,
-                          partition=args.partition)
+                          partition=args.partition, obs=Observability())
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -49,10 +62,10 @@ def _host(args):
         server.submit(r, rng.integers(0, cfg.vocab_size, plen))
         reqs.append(r)
     outputs = server.run()
-    print(f"served {len(outputs)} requests; stats: {server.stats}")
     done = sum(len(v) for v in outputs.values())
-    print(f"generated {done} tokens total; KV pool clean:",
-          server.pool.free_blocks == server.pool.n_blocks)
+    print(run_report(server, header=(
+        f"served {len(outputs)} requests, {done} tokens total")))
+    _write_obs_outputs(args, server)
 
 
 def _replay(args):
@@ -63,6 +76,8 @@ def _replay(args):
     from repro.core.estimator import HardwareSpec, PerfEstimator
     from repro.core.profiler import SurrogateMachine
     from repro.models import init_params
+    from repro.obs import Observability
+    from repro.obs.report import run_report
     from repro.serving.frontend import (OnlineFrontend, VirtualClock,
                                         WallClock, estimator_cycle_cost,
                                         oracle_cycle_cost)
@@ -81,7 +96,7 @@ def _replay(args):
     server = BulletServer(cfg, params, slo=slo, est=est,
                           max_slots=args.slots, max_len=args.max_len,
                           refit=not args.no_refit,
-                          partition=args.partition)
+                          partition=args.partition, obs=Observability())
     trace = fit_trace_to_context(
         generate_trace(args.dataset, args.rate, args.duration,
                        seed=args.seed, max_requests=args.requests),
@@ -101,19 +116,13 @@ def _replay(args):
             f"  [{t:8.3f}s] rid={r.rid} tok#{r.generated}={tok}")
     fe.submit_trace(trace, cfg.vocab_size, seed=args.seed)
     m = fe.run()
-    print(f"replay({args.clock}) {args.dataset} rate={args.rate}/s "
-          f"dur={args.duration}s -> {len(trace)} requests")
     if fe.truncated:
         print("WARNING: replay hit max_cycles with unfinished requests; "
               "metrics cover the completed subset only")
-    print(m.row())
-    print(f"stats: {server.stats}")
-    if server.pred_actual:
-        rel = [abs(p / a - 1.0) for _, p, a in server.pred_actual if a > 0]
-        print(f"estimator: {len(rel)} cycles observed, mean |pred/actual-1| "
-              f"= {sum(rel) / len(rel):.3f}, refits applied "
-              f"= {server.stats.refits}")
-    print("KV pool clean:", server.pool.free_blocks == server.pool.n_blocks)
+    print(run_report(server, metrics=m, header=(
+        f"replay({args.clock}) {args.dataset} rate={args.rate}/s "
+        f"dur={args.duration}s -> {len(trace)} requests")))
+    _write_obs_outputs(args, server)
 
 
 def _sim(args):
@@ -171,6 +180,13 @@ def main():
                          "disjoint prefill/decode sub-meshes with KV "
                          "handoff (needs >= 2 devices); auto = per-task "
                          "combined-table argmin")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the engine's per-cycle Chrome trace-event "
+                         "JSON here (host/replay modes; open in Perfetto "
+                         "— docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus-style metrics snapshot here "
+                         "at the end of the run (host/replay modes)")
     ap.add_argument("--no-refit", action="store_true",
                     help="pin the estimator's offline params (disable the "
                          "online refit loop; see docs/TUNING.md)")

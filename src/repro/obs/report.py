@@ -1,0 +1,47 @@
+"""Human-readable end-of-run report derived from the metrics snapshot.
+
+``launch/serve.py``'s host and replay modes used to hand-print
+``server.stats`` and pred/actual error lines separately; both now route
+through :func:`run_report`, which syncs the engine's counters into the
+registry and formats ONE view off the resulting snapshot — the printed
+report and an exported ``--metrics-out`` file can never disagree.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.serving.request import ServingMetrics
+
+
+def _engine_counters(snap: dict) -> str:
+    prefix = "bullet_engine_"
+    parts = [f"{k[len(prefix):-len('_total')]}={int(v)}"
+             for k, v in snap.items()
+             if k.startswith(prefix) and k.endswith("_total")]
+    return " ".join(parts)
+
+
+def run_report(server, metrics: Optional[ServingMetrics] = None,
+               header: str = "") -> str:
+    """Format the end-of-run summary for ``server`` from its metrics
+    snapshot (works for host batches and online replays alike)."""
+    obs = server.obs
+    obs.sync_engine_stats(server)
+    snap = obs.registry.snapshot()
+    lines: List[str] = []
+    if header:
+        lines.append(header)
+    if metrics is not None:
+        lines.append(metrics.row())
+    lines.append(f"stats: {_engine_counters(snap)}")
+    n_obs = snap.get("bullet_estimator_observed_cycles", 0)
+    if n_obs:
+        lines.append(
+            f"estimator: {int(n_obs)} cycles observed, "
+            f"mean |pred/actual-1| = "
+            f"{snap.get('bullet_estimator_mean_rel_error', 0.0):.3f}, "
+            f"refits applied = {int(snap.get('bullet_engine_refits_total', 0))}")
+    clean = server.pool.free_blocks == server.pool.n_blocks
+    lines.append(f"KV pool clean: {clean}")
+    return "\n".join(lines)

@@ -188,7 +188,27 @@ class OnlineFrontend:
                 break
         self.truncated = i < len(self._queue) or not self.server.idle
         self.server.pool.check_invariants()
-        return self.metrics()
+        m = self.metrics()
+        obs = self.server.obs
+        if obs.enabled:
+            # end-of-run rollup: absorb the engine's counters into the
+            # registry and publish the aggregate serving metrics, so an
+            # exported snapshot carries the whole run
+            obs.sync_engine_stats(self.server)
+            r = obs.registry
+            r.gauge("bullet_replay_truncated",
+                    "1 if the replay hit max_cycles with work left"
+                    ).set(float(self.truncated))
+            r.gauge("bullet_run_goodput",
+                    "fraction of finished requests meeting both SLOs"
+                    ).set(0.0 if m.is_empty else m.goodput)
+            r.gauge("bullet_run_throughput_tok_s",
+                    "output tokens per second over the run"
+                    ).set(0.0 if m.is_empty else m.throughput_tok_s)
+            r.gauge("bullet_run_finished_requests",
+                    "requests that finished during the run"
+                    ).set(m.n_requests)
+        return m
 
     def metrics(self) -> ServingMetrics:
         return ServingMetrics.from_requests(self.requests, self.server.slo)

@@ -99,11 +99,24 @@ class ServingMetrics:
     goodput: float                   # fraction meeting both SLOs
     mean_queue_s: float
 
+    @property
+    def is_empty(self) -> bool:
+        """True for the zero-finished sentinel (see :meth:`empty`)."""
+        return self.n_requests == 0
+
+    @staticmethod
+    def empty() -> "ServingMetrics":
+        """Explicit zero-finished sentinel: all fields zero (never NaN),
+        ``is_empty`` true, and :meth:`row` reports the case legibly
+        instead of printing NaN-stuffed columns."""
+        return ServingMetrics(0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+                              0.0)
+
     @staticmethod
     def from_requests(reqs: Sequence[Request], slo: SLO) -> "ServingMetrics":
         done = [r for r in reqs if r.phase == Phase.FINISHED]
         if not done:
-            return ServingMetrics(0, 0, *([float("nan")] * 7), 0.0)
+            return ServingMetrics.empty()
         t0 = min(r.arrival for r in done)
         t1 = max(r.finish_time for r in done)
         out_tokens = sum(r.generated for r in done)
@@ -125,6 +138,8 @@ class ServingMetrics:
         )
 
     def row(self) -> str:
+        if self.is_empty:
+            return "n=0 (no requests finished; no latency stats)"
         return (f"n={self.n_requests} ttft={self.mean_ttft_s*1e3:.1f}ms "
                 f"p90={self.p90_ttft_s*1e3:.1f}ms tpot={self.mean_tpot_ms:.1f}ms "
                 f"p90tpot={self.p90_tpot_ms:.1f}ms thr={self.throughput_tok_s:.0f}tok/s "
