@@ -46,10 +46,12 @@ from repro.core.metadata import MetadataBuffer
 from repro.core.resource import ResourceManager
 from repro.core.scheduler import SchedulerConfig, SLOScheduler
 from repro.kvcache.paged import PagedKVPool, transfer_pages
-from repro.launch.submesh import (SubMeshSplit, carve_submeshes, chip_mesh,
-                                  find_split)
+from repro.launch.submesh import (HandoffPolicy, SubMeshSplit,
+                                  carve_submeshes, chip_mesh, find_split)
 from repro.models import transformer as T
 from repro.obs import NULL_OBS, CycleEvent, Observability
+from repro.resilience.faults import (NULL_FAULTS, DispatchError, FaultInjector,
+                                     HandoffError)
 from repro.models.sharding import (submesh_cache_sharding,
                                    submesh_param_sharding)
 from repro.serving.request import Phase, Request, SLO
@@ -217,6 +219,16 @@ class EngineStats:
     #: KV handoffs (requests whose pages re-sharded prefill→decode mesh)
     chip_cycles: int = 0
     handoffs: int = 0
+    #: resilience counters (docs/RESILIENCE.md): deadline/explicit cancels,
+    #: backpressure sheds, transient-handoff retries, unwound prefill
+    #: batches, dispatch failures absorbed, and guard lattice transitions
+    cancelled: int = 0
+    shed: int = 0
+    handoff_retries: int = 0
+    prefill_aborts: int = 0
+    dispatch_failures: int = 0
+    degrades: int = 0
+    restores: int = 0
 
 
 class DecodeWork(NamedTuple):
@@ -284,7 +296,9 @@ class BulletServer:
                  page_size: int = 16, fused: Optional[bool] = None,
                  refit=None, refit_interval: int = 32,
                  partition: str = "tile", devices=None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 faults: Optional[FaultInjector] = None,
+                 guard=None):
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -303,6 +317,13 @@ class BulletServer:
         #: every hook below is gated on ``self.obs.enabled``, so the
         #: uninstrumented hot path pays one attribute check per cycle.
         self.obs = obs if obs is not None else NULL_OBS
+        #: fault-injection seam (docs/RESILIENCE.md): NULL_FAULTS (disabled)
+        #: by default, mirroring NULL_OBS — every seam below is gated on
+        #: ``self.faults.enabled`` so production pays one attribute check
+        self.faults = faults if faults is not None else NULL_FAULTS
+        #: retry-with-backoff policy for transient cross-mesh handoff
+        #: failures; an attached SLOGuard installs its own
+        self.handoff_policy = HandoffPolicy()
         #: the cycle event awaiting its measured duration (the driver's
         #: record_cycle_actual completes it)
         self._open_cycle: Optional[CycleEvent] = None
@@ -458,6 +479,12 @@ class BulletServer:
             # decode-side state starts homed on the global mesh (tile
             # semantics: every chip co-resident); chip cycles re-home it
             self._home_decode(self._global_sharding)
+        #: SLO watchdog (resilience.guard.SLOGuard), consulted in step();
+        #: None runs ungoverned — deadline misses and dispatch failures
+        #: surface to the caller untouched
+        self.guard = guard
+        if guard is not None:
+            guard.attach(self)
 
     def _build_fused_executable(self, part) -> FusedExecutable:
         """ResourceManager builder: one fused-step launcher per quantized
@@ -766,10 +793,12 @@ class BulletServer:
         P.total_layers = self.cfg.n_layers
         P.n_tokens = self.ptask.n_tokens
         P.n_waiting = len(self.pending)
-        if self._chip_enabled:
+        if self._chip_enabled and self.partition != "tile":
             # pin the task's granularity for its lifetime (pages scatter
             # into one pool consistently): forced under partition="chip",
-            # the scheduler's combined-table argmin under "auto"
+            # the scheduler's combined-table argmin under "auto". A guard
+            # degraded to partition="tile" keeps new tasks off the chip
+            # path even though the split table stays built.
             self.ptask.granularity = (
                 "chip" if self.partition == "chip"
                 else self.scheduler.preferred_granularity(self.buffer.state))
@@ -794,6 +823,8 @@ class BulletServer:
         """Launch ONE pattern-repeat group of ``task`` (serial dispatch —
         the fused cycle launches its group inside the fused executable
         instead) and migrate to decode when the last group completes."""
+        if self.faults.enabled:
+            self.faults.dispatch("prefill")
         rep = task.rep
         params = self.params
         if self._chip_enabled:
@@ -846,24 +877,61 @@ class BulletServer:
         re-shard the written pages from the prefill sub-mesh's staging pool
         onto the decode sub-mesh first (the jax.device_put KV handoff the
         estimator charges at ici_bw). Dense fallback: copy each request's
-        ``max_len`` cache row into its decode slot."""
+        ``max_len`` cache row into its decode slot.
+
+        Requests cancelled mid-prefill (deadline hit while the batch's
+        device arrays were in flight — ``cancel_reason`` set) are finalized
+        here instead of migrating: pages freed, no token emitted, no
+        handoff blocks moved."""
         params = (self._params_for(task.sharding)
                   if task.sharding is not None else self.params)
         first_tokens = np.asarray(
             _final_logits(params, task.x, task.lengths, cfg=self.cfg))
         if task.granularity == "chip" and self._chip_enabled:
             lens = np.asarray(task.lengths)
+            live = [r for r in task.batch if r.cancel_reason is None]
             blocks: List[int] = []
+            tokens_moved = 0
             for i, r in enumerate(task.batch):
+                if r.cancel_reason is not None:
+                    continue
                 blocks.extend(self.pool.written_blocks(r.rid, int(lens[i])))
-            self.cache = transfer_pages(self.cache_p, self.cache, blocks,
-                                        self._decode_sharding)
-            self.stats.handoffs += len(task.batch)
-            self.last_handoff_tokens += int(lens.sum())
+                tokens_moved += int(lens[i])
+            # transient cross-mesh handoff failures retry with backoff
+            # (the injected fault hook raises before any page moves, so a
+            # retry re-attempts the identical transfer); an exhausted
+            # budget unwinds the whole batch back to the queue and lets
+            # the guard leave the chip rung
+            fault = self.faults.handoff_hook() if self.faults.enabled \
+                else None
+            attempt = 0
+            while True:
+                try:
+                    self.cache = transfer_pages(
+                        self.cache_p, self.cache, blocks,
+                        self._decode_sharding, fault=fault)
+                    break
+                except HandoffError:
+                    attempt += 1
+                    self.stats.handoff_retries += 1
+                    if attempt > self.handoff_policy.max_retries:
+                        self._abort_prefill_task(task, now)
+                        # clear before notifying: the guard's chip
+                        # degrade aborts any live chip task, and this
+                        # one is already torn down
+                        self.ptask = None
+                        if self.guard is not None:
+                            self.guard.on_handoff_exhausted(self, now)
+                        return
+                    self.faults.charge_delay(
+                        self.handoff_policy.backoff(attempt))
+            self.stats.handoffs += len(live)
+            self.last_handoff_tokens += tokens_moved
             if self.obs.enabled:
                 for i, r in enumerate(task.batch):
-                    self.obs.spans.mark(r.rid, "handoff", now,
-                                        tokens=float(lens[i]))
+                    if r.cancel_reason is None:
+                        self.obs.spans.mark(r.rid, "handoff", now,
+                                            tokens=float(lens[i]))
         P = self.buffer.state.prefill
         if self.paged:
             # migrated slots flip PREFILL->DECODE: re-map their pages into
@@ -871,6 +939,13 @@ class BulletServer:
             self._tables_dirty = True
         for i, r in enumerate(task.batch):
             slot = r._slot                                  # type: ignore
+            if r.cancel_reason is not None:
+                # deadline hit mid-prefill: finalize the deferred cancel
+                # at the group boundary — free pages, emit nothing
+                self.pool.free(r.rid)
+                self.slot_req[slot] = None
+                self._cancelled(r, now, r.cancel_reason)
+                continue
             if not self.paged:
                 for j in range(len(self.cfg.pattern)):
                     for key in self.cache["blocks"][j]:
@@ -934,6 +1009,173 @@ class BulletServer:
         s.decode.decode_time.pop(rid, None)
         s.ready_for_decode = [e for e in s.ready_for_decode if e[0] != rid]
 
+    # -- resilience (docs/RESILIENCE.md) ----------------------------------
+    def cancel_request(self, r: Request, now: float,
+                       why: str = "deadline") -> None:
+        """Cancel a live request (deadline miss, operator action): release
+        its pool pages through the same table-ownership edits preemption
+        uses and retire it with ``Phase.CANCELLED``. A request whose
+        prefill batch is in flight is only *marked* — its device arrays
+        are part of the batch, so the removal happens at the next layer-
+        group boundary (``_finish_prefill``) instead of mid-dispatch."""
+        if r.phase in (Phase.FINISHED, Phase.CANCELLED):
+            return
+        if r.phase == Phase.QUEUED:
+            if r in self.pending:
+                self.pending.remove(r)
+        elif r.phase == Phase.PREFILL:
+            r.cancel_reason = why
+            return
+        else:                                   # DECODE: live slot
+            slot = r._slot                                  # type: ignore
+            self.pool.free(r.rid)
+            if self.paged:
+                self._tables_dirty = True
+            self.slot_req[slot] = None
+            self.active = self.active.at[slot].set(False)
+            D = self.buffer.state.decode
+            if r.rid in D.batch:
+                D.batch.remove(r.rid)
+        self._cancelled(r, now, why)
+
+    def _cancelled(self, r: Request, now: float, why: str) -> None:
+        """Terminal cancel bookkeeping shared by the immediate and the
+        deferred (mid-prefill) paths."""
+        r.phase = Phase.CANCELLED
+        r.cancel_reason = why
+        r.finish_time = now
+        self.stats.cancelled += 1
+        if self.obs.enabled:
+            self.obs.requests_cancelled.labels(why=why).inc()
+            self.obs.spans.mark(r.rid, "cancel", now, why=why)
+        self._drop_request_meta(r.rid)
+
+    def _abort_prefill_task(self, task: PrefillTask, now: float) -> None:
+        """Unwind an in-flight prefill batch without migrating: release
+        every request's pages and requeue the survivors (they re-prefill
+        from scratch deterministically, like a preemption); requests
+        already marked for cancellation end here. The caller clears
+        ``self.ptask``."""
+        for r in task.batch:
+            slot = r._slot                                  # type: ignore
+            self.slot_req[slot] = None
+            self.active = self.active.at[slot].set(False)
+            if r.cancel_reason is not None:
+                self.pool.free(r.rid)
+                self._cancelled(r, now, r.cancel_reason)
+                continue
+            self.pool.preempt(r.rid)
+            r.phase = Phase.QUEUED
+            self.pending.append(r)
+            if self.obs.enabled:
+                self.obs.spans.mark(r.rid, "abort", now,
+                                    rep=float(task.rep))
+            self._drop_request_meta(r.rid)
+        self.stats.prefill_aborts += 1
+        if self.paged:
+            self._tables_dirty = True
+        P = self.buffer.state.prefill
+        P.active_rid = None
+        P.layers_done = 0
+        P.n_tokens = 0
+
+    def set_fused(self, flag: bool) -> None:
+        """Flip fused spatial co-execution on/off at a cycle boundary (the
+        guard's fused→serial rung). The scheduler's contention model must
+        follow the execution mode, so both flip together."""
+        if flag == self.fused:
+            return
+        if flag and not self.paged:
+            raise ValueError("fused execution needs the paged cache")
+        self.fused = flag
+        self.scheduler.sc = replace(self.scheduler.sc, fused=flag)
+
+    def set_cache_mode(self, paged: bool, now: float) -> None:
+        """Swap between the block-paged pool and the dense fixed-slot
+        reference layout (the guard's paged→dense rung, and its restore).
+        The two layouts share no device state, so all in-flight work is
+        unwound first: the prefill batch aborts back to the queue and
+        every decode slot is preempted with its generated prefix — both
+        re-enter through normal admission and re-prefill deterministically.
+        """
+        if paged == self.paged:
+            return
+        assert not self.fused, "degrade fused→serial before paged→dense"
+        if paged and not T.supports_paged_cache(self.cfg):
+            raise ValueError(f"{self.cfg.name}: cannot restore the paged "
+                             "cache (pattern needs pure ATTN)")
+        if self.ptask is not None:
+            self._abort_prefill_task(self.ptask, now)
+            self.ptask = None
+        for slot, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.pool.preempt(r.rid)
+            self.active = self.active.at[slot].set(False)
+            self.slot_req[slot] = None
+            r.phase = Phase.QUEUED
+            self.pending.append(r)
+            self.stats.preempted += 1
+            if self.obs.enabled:
+                self.obs.spans.mark(r.rid, "preempt", now,
+                                    generated=float(r.generated))
+            D = self.buffer.state.decode
+            if r.rid in D.batch:
+                D.batch.remove(r.rid)
+            self._drop_request_meta(r.rid)
+        dtype = jax.tree.leaves(self.cache)[0].dtype
+        self.paged = paged
+        if paged:
+            self.cache = T.init_paged_cache(self.cfg, self.pool.n_blocks,
+                                            self.page_size, dtype)
+            self.max_blocks = self.pool.blocks_for(self.max_len)
+            self._trash_page = self.pool.n_blocks
+            self._host_tables = np.full((self.max_slots, self.max_blocks),
+                                        self._trash_page, np.int32)
+            self._tables_dirty = False
+            self._dev_tables = {}
+        else:
+            self.cache = T.init_cache(self.cfg, self.max_slots, self.max_len,
+                                      dtype)
+        if self._chip_enabled:
+            # fresh arrays have default placement: re-home lazily on the
+            # next cycle that pins one
+            self._decode_sharding = None
+
+    def check_invariants(self) -> None:
+        """Crash-on-corruption audit, run by chaos tests after every cycle:
+        pool block ownership is a partition of allocated pages; every pool
+        owner is a live request (no dead-request leaks — fault-injected
+        pool-squeeze phantoms are accounted); slot bookkeeping agrees with
+        request phases; live spans are well-ordered."""
+        self.pool.check_invariants()
+        owners = set(self.pool.owners())
+        holders = {r.rid for r in self.slot_req if r is not None}
+        if self.ptask is not None:
+            holders |= {r.rid for r in self.ptask.batch}
+        phantoms = self.faults.phantom_rids() if self.faults.enabled \
+            else set()
+        leaked = owners - holders - phantoms
+        assert not leaked, (
+            f"pool pages leaked: rids {sorted(leaked)} own blocks but are "
+            f"neither in a slot, the prefill batch, nor fault phantoms")
+        act = np.asarray(self.active)
+        for slot, r in enumerate(self.slot_req):
+            if r is None:
+                assert not bool(act[slot]), f"empty slot {slot} active"
+                continue
+            assert getattr(r, "_slot", None) == slot, \
+                f"slot {slot} holds rid {r.rid} with _slot={r._slot}"
+            assert r.phase in (Phase.PREFILL, Phase.DECODE), \
+                f"slot {slot} rid {r.rid} in phase {r.phase}"
+            assert r.rid in owners, \
+                f"slot {slot} rid {r.rid} owns no pool pages"
+            assert bool(act[slot]) == (r.phase == Phase.DECODE), (
+                f"slot {slot} rid {r.rid}: active={bool(act[slot])} but "
+                f"phase={r.phase}")
+        if self.obs.enabled:
+            self.obs.spans.check_invariants()
+
     # -- decode engine ----------------------------------------------------
     def _decode_cycle(self, now: float) -> bool:
         if not bool(np.any(np.asarray(self.active))):
@@ -948,6 +1190,8 @@ class BulletServer:
             return False
         self.buffer.state.decode.paused = False
         self._switch(decision.resources)
+        if self.faults.enabled:
+            self.faults.dispatch("decode")
 
         params = self.params
         if self._chip_enabled:
@@ -1040,6 +1284,8 @@ class BulletServer:
             return True
         self.buffer.state.decode.paused = False
         ex = self.rm.executable()
+        if self.faults.enabled:
+            self.faults.dispatch("fused")
 
         params = self.params
         if self._chip_enabled:
@@ -1094,7 +1340,14 @@ class BulletServer:
             f"chip task but executable {type(ex).__name__} for config "
             f"{self.rm.current}")
 
-        # prefill side first, so both sub-meshes run concurrently
+        # prefill side first, so both sub-meshes run concurrently. Both
+        # chip seams fire before any device work: the prefill dispatch
+        # advances task.x, so a later raise would double-apply the layer
+        # group when the cycle retries at the same ``rep``.
+        if self.faults.enabled:
+            self.faults.dispatch("chip_prefill")
+            if bool(np.any(np.asarray(self.active))):
+                self.faults.dispatch("chip_decode")
         self._home_task(task, ex.p_sharding)
         p_params = self._params_for(ex.p_sharding)
         rep = task.rep
@@ -1179,6 +1432,8 @@ class BulletServer:
             return
         pred = predict_cycle(self.est, self.cfg, obs)
         self.pred_actual.append((obs.kind, pred, actual_s))
+        if self.guard is not None:
+            self.guard.on_cycle_actual(self, obs.kind, pred, actual_s)
         if self.obs.enabled and self._open_cycle is not None:
             self.obs.complete_cycle(self._open_cycle, actual_s)
             self._open_cycle = None
@@ -1249,13 +1504,26 @@ class BulletServer:
         otherwise. Returns True if any engine did work. Drive this from an
         online frontend (serving.frontend) or via :meth:`run` for offline
         batches."""
-        did = self._step_inner(now)
+        if self.guard is not None:
+            self.guard.before_step(self, now)
+        try:
+            did = self._step_inner(now)
+        except DispatchError as e:
+            if self.guard is None:
+                raise
+            # the cycle's work is lost but no state was mutated (every
+            # dispatch seam raises before device arrays change); the guard
+            # counts the failure and degrades once failures persist
+            self.guard.on_dispatch_failure(self, e, now)
+            did = True
         if self.obs.enabled:
             self._record_cycle_event(now)
         return did
 
     def _step_inner(self, now: float) -> bool:
         self._maybe_refit()
+        if self.faults.enabled:
+            self.faults.begin_cycle(self)
         self.last_prefill_tokens = 0
         self.last_decode = None
         self.last_fused = False

@@ -153,6 +153,12 @@ class PagedKVPool:
     def table(self, rid: int) -> Optional[PageTable]:
         return self._tables.get(rid)
 
+    def owners(self) -> List[int]:
+        """The rids currently holding pool blocks — the engine invariant
+        checker asserts this is a subset of its live requests (plus any
+        fault-injected phantoms), i.e. no dead request leaks pages."""
+        return list(self._tables.keys())
+
     def written_blocks(self, rid: int, n_tokens: int) -> List[int]:
         """The leading blocks of ``rid`` that actually hold written KV —
         ``ceil(n_tokens / block_size)`` of its reservation. A request
@@ -229,7 +235,7 @@ def _jitted_transfer_ops():
 
 
 def transfer_pages(src_cache, dst_cache, blocks: Sequence[int],
-                   placement=None):
+                   placement=None, fault=None):
     """Prefill→decode cross-mesh KV handoff: gather ``blocks`` from every
     layer of the source page pool (on the prefill sub-mesh), re-shard them
     via ``jax.device_put`` onto ``placement`` (the decode pool's
@@ -238,9 +244,17 @@ def transfer_pages(src_cache, dst_cache, blocks: Sequence[int],
 
     ``placement`` None skips the explicit re-shard (same-mesh pools —
     useful as the single-device reference path the multidevice tests
-    compare against)."""
+    compare against).
+
+    ``fault`` is the resilience seam (docs/RESILIENCE.md): a callable
+    invoked as ``fault(len(blocks))`` before any device work — an
+    injected ``HandoffError`` raised from it leaves both pools untouched,
+    so the engine's retry-with-backoff re-attempts the identical
+    transfer. None (production) costs nothing."""
     if not len(blocks):
         return dst_cache
+    if fault is not None:
+        fault(len(blocks))
     import jax
     import jax.numpy as jnp
 

@@ -25,6 +25,30 @@ import argparse
 import sys
 
 
+def _resilience_kwargs(args):
+    """Build the faults=/guard= engine kwargs from the CLI flags.
+
+    Returns an empty dict when no resilience flag was given so the
+    engine keeps its NULL_FAULTS / guard-free defaults.
+    """
+    kw = {}
+    if args.fault_plan:
+        from repro.resilience import FaultInjector, FaultPlan
+        kw["faults"] = FaultInjector(FaultPlan.from_json(args.fault_plan))
+    if (args.deadline_ttft is not None or args.deadline_total is not None
+            or args.max_queue is not None):
+        from repro.resilience import GuardConfig, SLOGuard
+        gkw = {}
+        if args.deadline_ttft is not None:
+            gkw["deadline_ttft_s"] = args.deadline_ttft
+        if args.deadline_total is not None:
+            gkw["deadline_total_s"] = args.deadline_total
+        if args.max_queue is not None:
+            gkw["max_queue"] = args.max_queue
+        kw["guard"] = SLOGuard(GuardConfig(**gkw))
+    return kw
+
+
 def _write_obs_outputs(args, server) -> None:
     """Shared --trace-out / --metrics-out export for host and replay."""
     if args.trace_out:
@@ -52,7 +76,8 @@ def _host(args):
     server = BulletServer(cfg, params,
                           slo=SLO(args.slo_ttft, args.slo_tpot),
                           max_slots=args.slots, max_len=args.max_len,
-                          partition=args.partition, obs=Observability())
+                          partition=args.partition, obs=Observability(),
+                          **_resilience_kwargs(args))
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -96,7 +121,8 @@ def _replay(args):
     server = BulletServer(cfg, params, slo=slo, est=est,
                           max_slots=args.slots, max_len=args.max_len,
                           refit=not args.no_refit,
-                          partition=args.partition, obs=Observability())
+                          partition=args.partition, obs=Observability(),
+                          **_resilience_kwargs(args))
     trace = fit_trace_to_context(
         generate_trace(args.dataset, args.rate, args.duration,
                        seed=args.seed, max_requests=args.requests),
@@ -187,6 +213,23 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a Prometheus-style metrics snapshot here "
                          "at the end of the run (host/replay modes)")
+    ap.add_argument("--deadline-ttft", type=float, default=None,
+                    metavar="SECONDS",
+                    help="cancel a request whose first token has not "
+                         "streamed by this trace-time age (SLOGuard; "
+                         "docs/RESILIENCE.md)")
+    ap.add_argument("--deadline-total", type=float, default=None,
+                    metavar="SECONDS",
+                    help="cancel a request still unfinished at this "
+                         "trace-time age, freeing its KV pages")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the pending queue; the frontend retries "
+                         "rejected submissions, then sheds "
+                         "(admission backpressure)")
+    ap.add_argument("--fault-plan", default=None, metavar="JSON",
+                    help="inject a seeded deterministic fault plan: a "
+                         "JSON file path or inline JSON object "
+                         "(schema in docs/RESILIENCE.md)")
     ap.add_argument("--no-refit", action="store_true",
                     help="pin the estimator's offline params (disable the "
                          "online refit loop; see docs/TUNING.md)")

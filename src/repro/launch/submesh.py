@@ -88,3 +88,20 @@ def find_split(splits: Sequence[SubMeshSplit], prefill_chips: int,
         if s.prefill_chips == prefill_chips and s.decode_chips == decode_chips:
             return s
     return None
+
+
+@dataclass(frozen=True)
+class HandoffPolicy:
+    """Retry-with-backoff policy for *transient* cross-mesh KV handoff
+    failures (docs/RESILIENCE.md): the engine re-attempts the
+    ``transfer_pages`` re-shard up to ``max_retries`` times, charging an
+    exponentially growing backoff to the cycle's measured duration, and
+    only then aborts the prefill task and degrades chip→tile. Frozen so
+    a guard config can carry one as a hashable default."""
+
+    max_retries: int = 3
+    backoff_s: float = 0.005
+
+    def backoff(self, attempt: int) -> float:
+        """Seconds to wait before retry ``attempt`` (1-based)."""
+        return self.backoff_s * (2 ** max(attempt - 1, 0))

@@ -24,6 +24,7 @@ path unchanged.
 from __future__ import annotations
 
 import json
+from collections import deque
 from dataclasses import fields as dataclass_fields
 from typing import Optional
 
@@ -104,6 +105,31 @@ class Observability:
             "pending queue (re-queues after preemption excluded)")
         self.requests_finished = r.counter(
             "bullet_requests_finished_total", "requests fully generated")
+        # resilience signals (docs/RESILIENCE.md)
+        self.requests_cancelled = r.counter(
+            "bullet_requests_cancelled_total",
+            "requests cancelled before completing, by cause",
+            labels=("why",))
+        self.requests_shed = r.counter(
+            "bullet_requests_shed_total",
+            "requests shed by admission backpressure after retries")
+        self.requests_timed_out = r.counter(
+            "bullet_requests_timed_out_total",
+            "requests still in flight when the replay's cycle budget ran "
+            "out")
+        self.guard_transitions = r.counter(
+            "bullet_guard_transitions_total",
+            "SLO-guard degradation lattice transitions "
+            "(degrade:<rung> / restore:<rung>)", labels=("transition",))
+        self.guard_dispatch_failures = r.counter(
+            "bullet_guard_dispatch_failures_total",
+            "executable dispatch failures absorbed by the guard, by "
+            "dispatch kind", labels=("kind",))
+        self.guard_degraded = r.gauge(
+            "bullet_guard_degraded_rungs",
+            "degradation rungs currently applied (0 = native fast path)")
+        #: Chrome-trace instant events (guard transitions etc.), bounded
+        self.events = deque(maxlen=4096)
 
     # -- scheduler hook --------------------------------------------------
     def on_decision(self, decision, ttft_vio: bool = False,
@@ -172,12 +198,22 @@ class Observability:
                 "cycles with a recorded actual in the pred_actual "
                 "window").set(len(server.pred_actual))
 
+    def mark_instant(self, name: str, t: float, **args) -> None:
+        """Record a global instant event (``ph: "i"``) on the trace —
+        guard lattice transitions use this so degradations are visible
+        next to the cycles they interrupt."""
+        if not self.enabled:
+            return
+        self.events.append({"name": name, "cat": "guard", "ph": "i",
+                            "s": "g", "ts": t * 1e6, "pid": 1, "tid": 0,
+                            "args": dict(args)})
+
     # -- export ----------------------------------------------------------
     def chrome_trace(self) -> dict:
         """The combined Chrome trace-event document: engine cycles, KV
-        counters, and request-span tracks."""
+        counters, request-span tracks, and guard instant events."""
         return self.trace.chrome_trace(
-            extra_events=self.spans.chrome_events())
+            extra_events=self.spans.chrome_events() + list(self.events))
 
     def render_metrics(self) -> str:
         return self.registry.render()

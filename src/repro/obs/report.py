@@ -42,6 +42,21 @@ def run_report(server, metrics: Optional[ServingMetrics] = None,
             f"mean |pred/actual-1| = "
             f"{snap.get('bullet_estimator_mean_rel_error', 0.0):.3f}, "
             f"refits applied = {int(snap.get('bullet_engine_refits_total', 0))}")
+    timed_out = snap.get("bullet_requests_timed_out_total", 0)
+    if timed_out:
+        lines.append(
+            f"WARNING: {int(timed_out)} request(s) still in flight when "
+            "the cycle budget ran out — raise max_cycles or shrink the "
+            "trace; their latency stats are not in the row above")
+    degrades = snap.get("bullet_engine_degrades_total", 0)
+    if degrades:
+        lines.append(
+            f"guard: {int(degrades)} degradation(s), "
+            f"{int(snap.get('bullet_engine_restores_total', 0))} "
+            f"restore(s), "
+            f"{int(snap.get('bullet_engine_cancelled_total', 0))} "
+            f"cancelled, {int(snap.get('bullet_engine_shed_total', 0))} "
+            "shed")
     clean = server.pool.free_blocks == server.pool.n_blocks
     lines.append(f"KV pool clean: {clean}")
     return "\n".join(lines)

@@ -27,6 +27,11 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
+#: marks that end a span's lifecycle (docs/RESILIENCE.md): normal
+#: completion, deadline/operator cancel, admission shed, or the replay's
+#: cycle budget running out with the request still in flight
+TERMINAL_MARKS = ("finish", "cancel", "shed", "timed_out")
+
 
 @dataclass
 class SpanEvent:
@@ -63,8 +68,10 @@ class RequestSpan:
 
     @property
     def end(self) -> Optional[float]:
-        e = self.first("finish")
-        return e.t if e is not None else None
+        for e in self.events:
+            if e.name in TERMINAL_MARKS:
+                return e.t
+        return None
 
     def breakdown(self) -> Dict[str, float]:
         """Lifecycle latency decomposition in seconds; preempted spans
@@ -77,18 +84,21 @@ class RequestSpan:
         out: Dict[str, float] = {
             "preempts": float(self.count("preempt")),
             "resumes": float(self.count("resume")),
+            "aborts": float(self.count("abort")),
             "prefill_groups": float(self.count("prefill_group")),
         }
         if submit is None:
             return out
         # each admit/resume wait measured from the preceding queue entry
+        # (a preempted decode slot or an aborted prefill batch both
+        # requeue the request)
         queue = 0.0
         q_start: Optional[float] = submit.t
         for e in self.events:
             if e.name in ("admit", "resume") and q_start is not None:
                 queue += max(0.0, e.t - q_start)
                 q_start = None
-            elif e.name == "preempt":
+            elif e.name in ("preempt", "abort"):
                 q_start = e.t
         out["queue_s"] = queue
         if first_tok is not None:
@@ -119,7 +129,7 @@ class SpanTracker:
             span = RequestSpan(rid)
             self.live[rid] = span
         span.mark(name, t, **attrs)
-        if name == "finish":
+        if name in TERMINAL_MARKS:
             self.finished.append(self.live.pop(rid))
 
     def get(self, rid: int) -> Optional[RequestSpan]:
@@ -133,6 +143,29 @@ class SpanTracker:
 
     def all(self) -> List[RequestSpan]:
         return list(self.finished) + list(self.live.values())
+
+    def check_invariants(self) -> None:
+        """Span phase-ordering audit (run by the engine's
+        ``check_invariants`` under fault injection): timestamps are
+        non-decreasing in mark order, lifecycle-unique marks appear at
+        most once, and exactly one terminal mark ends a span — live spans
+        have none (terminal marks pop to the finished deque)."""
+        for span in self.all():
+            ts = [e.t for e in span.events]
+            assert all(a <= b for a, b in zip(ts, ts[1:])), (
+                f"span {span.rid}: timestamps regress: "
+                f"{list(zip(span.names(), ts))}")
+            assert span.count("submit") <= 1, \
+                f"span {span.rid}: multiple submits"
+            assert span.count("first_token") <= 1, \
+                f"span {span.rid}: multiple first_tokens"
+            terminal = sum(span.count(n) for n in TERMINAL_MARKS)
+            assert terminal <= 1, \
+                f"span {span.rid}: {terminal} terminal marks"
+            if span.rid in self.live:
+                assert terminal == 0, (
+                    f"span {span.rid} live but terminally marked: "
+                    f"{span.names()}")
 
     # -- Chrome trace-event export --------------------------------------
     def chrome_events(self, pid: int = 1) -> List[dict]:

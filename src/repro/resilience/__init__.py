@@ -1,0 +1,24 @@
+"""Resilience layer: deterministic fault injection + SLO watchdog.
+
+Two halves (docs/RESILIENCE.md):
+
+- :mod:`repro.resilience.faults` — a seeded, virtual-clock-driven
+  :class:`FaultInjector` that perturbs the engine through narrow seams
+  (straggler cycles, dispatch failures, cross-mesh handoff faults, page
+  pool squeezes, estimator drift). :data:`NULL_FAULTS` is the disabled
+  default, mirroring ``obs.NULL_OBS``: production pays one attribute
+  check per seam.
+- :mod:`repro.resilience.guard` — an :class:`SLOGuard` consulted in
+  ``BulletServer.step``: per-request deadline enforcement, bounded-queue
+  admission backpressure, and a degradation state machine over the
+  lattice fused→serial, chip→tile, paged→dense with cooldown probe-back.
+"""
+
+from repro.resilience.faults import (NULL_FAULTS, DispatchError, FaultInjector,
+                                     FaultPlan, FaultSpec, HandoffError)
+from repro.resilience.guard import AdmissionRejected, GuardConfig, SLOGuard
+
+__all__ = [
+    "AdmissionRejected", "DispatchError", "FaultInjector", "FaultPlan",
+    "FaultSpec", "GuardConfig", "HandoffError", "NULL_FAULTS", "SLOGuard",
+]

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core.engine import BulletServer
 from repro.core.estimator import predict_cycle
 from repro.core.profiler import SurrogateMachine
-from repro.serving.request import Request, ServingMetrics
+from repro.resilience.guard import AdmissionRejected
+from repro.serving.request import Phase, Request, ServingMetrics
 
 
 class WallClock:
@@ -113,17 +114,28 @@ class OnlineFrontend:
 
     def __init__(self, server: BulletServer, clock=None, *,
                  cycle_cost: Optional[Callable[[BulletServer], float]] = None,
-                 on_token: Optional[Callable[[Request, int, float], None]] = None):
+                 on_token: Optional[Callable[[Request, int, float], None]] = None,
+                 on_cycle: Optional[Callable[[BulletServer, float], None]] = None):
         self.server = server
         self.clock = clock if clock is not None else WallClock()
         self.cycle_cost = cycle_cost
         self.on_token = on_token
+        #: called as on_cycle(server, now) after every engine step — the
+        #: chaos replay runs the engine invariant checker here
+        self.on_cycle = on_cycle
         self.requests: List[Request] = []
         self.admitted_order: List[int] = []
         #: set by run(): True when max_cycles elapsed with work remaining,
         #: i.e. the metrics cover only the completed subset
         self.truncated = False
+        #: rids shed by admission backpressure / still in flight when the
+        #: cycle budget ran out (filled by run())
+        self.shed: List[int] = []
+        self.timed_out: List[int] = []
         self._queue: List[Tuple[Request, np.ndarray]] = []
+        #: backpressured submits awaiting retry: (release_at, tries, ...)
+        self._deferred: List[Tuple[float, int, Request, np.ndarray]] = []
+        self._i = 0
         self._cbs: Dict[int, Callable[[Request, int, float], None]] = {}
         self._chained_hook = server.on_token     # preserve a caller-set hook
         server.on_token = self._dispatch
@@ -155,24 +167,77 @@ class OnlineFrontend:
         if self._chained_hook is not None:
             self._chained_hook(req, token, now)
 
+    # -- admission (guard backpressure) ---------------------------------
+    def _release(self, now: float) -> None:
+        """Move arrived (and retry-due deferred) requests into the engine,
+        honoring the guard's bounded-queue admission backpressure: a
+        rejected submit retries after the guard's ``retry_after_s`` up to
+        ``max_submit_retries`` times, then sheds."""
+        due, still = [], []
+        for entry in self._deferred:
+            (due if entry[0] <= now else still).append(entry)
+        self._deferred = still
+        for _, tries, req, toks in due:
+            self._try_submit(req, toks, tries, now)
+        while (self._i < len(self._queue)
+               and self._queue[self._i][0].arrival <= now):
+            req, toks = self._queue[self._i]
+            self._i += 1
+            self._try_submit(req, toks, 0, now)
+
+    def _try_submit(self, req: Request, toks: np.ndarray, tries: int,
+                    now: float) -> None:
+        guard = self.server.guard
+        if guard is not None:
+            try:
+                guard.check_admission(self.server)
+            except AdmissionRejected as e:
+                if tries < guard.cfg.max_submit_retries:
+                    self._deferred.append(
+                        (now + e.retry_after_s, tries + 1, req, toks))
+                else:
+                    self._shed(req, now, tries)
+                return
+        self.server.submit(req, toks)
+        self.admitted_order.append(req.rid)
+
+    def _shed(self, req: Request, now: float, tries: int) -> None:
+        """Retryable-rejection budget exhausted: the request never enters
+        the engine — terminal CANCELLED with ``shed`` as the cause."""
+        req.phase = Phase.CANCELLED
+        req.cancel_reason = "shed"
+        req.finish_time = now
+        self.server.stats.shed += 1
+        self.shed.append(req.rid)
+        obs = self.server.obs
+        if obs.enabled:
+            obs.requests_shed.inc()
+            obs.spans.mark(req.rid, "shed", now, retries=float(tries))
+
+    def _next_release(self) -> Optional[float]:
+        ts = [t for t, *_ in self._deferred]
+        if self._i < len(self._queue):
+            ts.append(self._queue[self._i][0].arrival)
+        return min(ts) if ts else None
+
     # -- replay loop ----------------------------------------------------
     def run(self, max_cycles: int = 200_000) -> ServingMetrics:
         """Replay the submitted trace to completion (or ``max_cycles``)."""
         self._queue.sort(key=lambda e: (e[0].arrival, e[0].rid))
-        i = 0
+        self._i = 0
         cycles = 0
         while cycles < max_cycles:
             cycles += 1
             now = self.clock.now()
-            while i < len(self._queue) and self._queue[i][0].arrival <= now:
-                req, toks = self._queue[i]
-                i += 1
-                self.server.submit(req, toks)
-                self.admitted_order.append(req.rid)
+            self._release(now)
             did = self.server.step(now)
             if isinstance(self.clock, VirtualClock):
                 dt = (self.cycle_cost(self.server)
                       if self.cycle_cost else None)
+                if dt is not None and self.server.faults.enabled:
+                    # injected stragglers / drift stretch the measured
+                    # duration; retry backoff and handoff delays land here
+                    dt = self.server.faults.perturb_cycle(dt)
                 self.clock.advance(dt)
                 if dt is not None:
                     # the replay's advance IS the cycle's elapsed trace
@@ -181,12 +246,38 @@ class OnlineFrontend:
                     # and the refitter holds still; an oracle_cycle_cost
                     # replay observes real drift and the refit loop closes.
                     self.server.record_cycle_actual(dt)
+            if self.on_cycle is not None:
+                self.on_cycle(self.server, self.clock.now())
             if not did and self.server.idle:
-                if i < len(self._queue):        # idle gap: next arrival
-                    self.clock.sleep_until(self._queue[i][0].arrival)
+                nxt = self._next_release()
+                if nxt is not None:             # idle gap: next release
+                    self.clock.sleep_until(nxt)
                     continue
                 break
-        self.truncated = i < len(self._queue) or not self.server.idle
+        now = self.clock.now()
+        self.truncated = bool(self._i < len(self._queue) or self._deferred
+                              or not self.server.idle)
+        obs = self.server.obs
+        if self.truncated:
+            # the cycle budget ran out with work in flight: surface it per
+            # request instead of silently dropping their stats (released
+            # but unfinished requests are marked timed_out; queue entries
+            # never released just stay QUEUED)
+            admitted = set(self.admitted_order)
+            for r in self.requests:
+                if (r.rid in admitted
+                        and r.phase not in (Phase.FINISHED,
+                                            Phase.CANCELLED)):
+                    self.timed_out.append(r.rid)
+                    if obs.enabled:
+                        obs.requests_timed_out.inc()
+                        obs.spans.mark(r.rid, "timed_out", now,
+                                       phase=float(r.generated))
+        elif self.server.guard is not None:
+            # drained clean: probing back to the fast path is free now
+            self.server.guard.on_idle(self.server, now)
+        if self.server.faults.enabled:
+            self.server.faults.end_of_run(self.server)
         self.server.pool.check_invariants()
         m = self.metrics()
         obs = self.server.obs

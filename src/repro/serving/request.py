@@ -13,6 +13,9 @@ class Phase(Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     FINISHED = "finished"
+    #: terminal without completing: deadline cancel or admission shed
+    #: (docs/RESILIENCE.md); never counted toward goodput's denominator
+    CANCELLED = "cancelled"
 
 
 @dataclass
@@ -49,6 +52,12 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
+
+    #: why the request was cancelled (``ttft_deadline`` / ``total_deadline``
+    #: / ``shed`` / ...). Set before the terminal phase flip for requests
+    #: cancelled mid-prefill: the engine defers their removal to the next
+    #: layer-group boundary, and this mark is the tombstone it honors.
+    cancel_reason: Optional[str] = None
 
     # -- metrics ------------------------------------------------------
     @property
@@ -98,6 +107,9 @@ class ServingMetrics:
     throughput_tok_s: float          # output tokens / s
     goodput: float                   # fraction meeting both SLOs
     mean_queue_s: float
+    #: requests that ended CANCELLED (deadline / shed) — reported beside
+    #: the finished population, never inside its latency stats
+    n_cancelled: int = 0
 
     @property
     def is_empty(self) -> bool:
@@ -115,8 +127,11 @@ class ServingMetrics:
     @staticmethod
     def from_requests(reqs: Sequence[Request], slo: SLO) -> "ServingMetrics":
         done = [r for r in reqs if r.phase == Phase.FINISHED]
+        n_cancelled = sum(r.phase == Phase.CANCELLED for r in reqs)
         if not done:
-            return ServingMetrics.empty()
+            m = ServingMetrics.empty()
+            m.n_cancelled = n_cancelled
+            return m
         t0 = min(r.arrival for r in done)
         t1 = max(r.finish_time for r in done)
         out_tokens = sum(r.generated for r in done)
@@ -135,12 +150,14 @@ class ServingMetrics:
             throughput_tok_s=out_tokens / max(t1 - t0, 1e-9),
             goodput=sum(r.meets_slo(slo) for r in done) / len(done),
             mean_queue_s=sum(queue) / len(done),
+            n_cancelled=n_cancelled,
         )
 
     def row(self) -> str:
         if self.is_empty:
             return "n=0 (no requests finished; no latency stats)"
+        extra = f" cancelled={self.n_cancelled}" if self.n_cancelled else ""
         return (f"n={self.n_requests} ttft={self.mean_ttft_s*1e3:.1f}ms "
                 f"p90={self.p90_ttft_s*1e3:.1f}ms tpot={self.mean_tpot_ms:.1f}ms "
                 f"p90tpot={self.p90_tpot_ms:.1f}ms thr={self.throughput_tok_s:.0f}tok/s "
-                f"goodput={self.goodput*100:.1f}%")
+                f"goodput={self.goodput*100:.1f}%{extra}")

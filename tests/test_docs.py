@@ -14,7 +14,8 @@ def md_links(path: Path):
 
 
 def test_canonical_docs_exist():
-    for name in ("ARCHITECTURE.md", "PERF_MODEL.md", "TUNING.md"):
+    for name in ("ARCHITECTURE.md", "PERF_MODEL.md", "TUNING.md",
+                 "RESILIENCE.md"):
         p = ROOT / "docs" / name
         assert p.is_file(), f"missing docs/{name}"
         assert len(p.read_text()) > 1500, f"docs/{name} is a stub"
@@ -26,6 +27,7 @@ def test_readme_links_docs_and_resolve():
     assert "docs/ARCHITECTURE.md" in links
     assert "docs/PERF_MODEL.md" in links
     assert "docs/TUNING.md" in links
+    assert "docs/RESILIENCE.md" in links
     for rel in links:
         assert (ROOT / rel).exists(), f"README links missing path {rel}"
 
@@ -43,8 +45,10 @@ def test_docs_cross_links_resolve():
 
 def test_architecture_module_map_names_real_modules():
     text = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
-    mods = re.findall(r"`((?:core|serving|kvcache|launch)/\w+\.py)`", text)
+    mods = re.findall(
+        r"`((?:core|serving|kvcache|launch|resilience)/\w+\.py)`", text)
     assert len(mods) >= 10
+    assert any(m.startswith("resilience/") for m in mods)
     for m in set(mods):
         assert (ROOT / "src" / "repro" / m).is_file(), (
             f"ARCHITECTURE.md names missing module {m}")

@@ -1,0 +1,517 @@
+"""Resilience layer: deterministic fault injection, the SLO guard's
+deadline/backpressure/degradation state machine, post-fault engine
+invariant audits, and the frontend's timed-out/shed bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import BulletServer
+from repro.core.scheduler import SchedulerConfig
+from repro.kvcache.paged import PagedKVPool
+from repro.models import init_params
+from repro.obs import Observability
+from repro.obs.report import run_report
+from repro.resilience import (FaultInjector, FaultPlan, FaultSpec,
+                              GuardConfig, SLOGuard)
+from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                    estimator_cycle_cost)
+from repro.serving.request import Phase, Request, SLO
+from repro.serving.workload import generate_trace
+
+
+@pytest.fixture(scope="module")
+def setup():
+    # 2 pattern repeats -> fused cycles co-locate prefill layer groups
+    # with decode iterations, the regime most degradations leave
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def mk_server(cfg, params, **kw):
+    kw.setdefault("slo", SLO(3.0, 150.0))
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("max_prefill_batch", 2)
+    return BulletServer(cfg, params, **kw)
+
+
+def small_trace(cfg, n=8, seed=3):
+    trace = generate_trace("sharegpt", rate_req_s=200.0, duration_s=10.0,
+                           seed=seed, max_requests=n)
+    rng = np.random.default_rng(seed)
+    prompts = {}
+    for r in trace:
+        r.arrival *= 0.01          # compress: prefills overlap decodes
+        r.prompt_len = max(4, min(r.prompt_len, 16))
+        r.output_len = max(2, min(r.output_len, 8))
+        prompts[r.rid] = rng.integers(0, cfg.vocab_size, r.prompt_len,
+                                      dtype=np.int32)
+    return trace, prompts
+
+
+def clone(trace):
+    return [Request(rid=r.rid, arrival=r.arrival, prompt_len=r.prompt_len,
+                    output_len=r.output_len) for r in trace]
+
+
+def replay(cfg, params, trace, prompts, *, check=False, max_cycles=200_000,
+           cost=True, **kw):
+    """Frontend replay with per-cycle engine invariant audits. ``cost``
+    switches between estimator-priced and fixed 1 ms cycles — deadline
+    tests use the fixed clock so trace time is predictable."""
+    server = mk_server(cfg, params, **kw)
+    on_cycle = (lambda s, t: s.check_invariants()) if check else None
+    fe = OnlineFrontend(server, VirtualClock(cycle_dt=1e-3),
+                        cycle_cost=estimator_cycle_cost if cost else None,
+                        on_cycle=on_cycle)
+    for r in trace:
+        fe.submit(r, prompts[r.rid])
+    m = fe.run(max_cycles=max_cycles)
+    return server, fe, m
+
+
+# ---------------------------------------------------------------------------
+# fault plan / injector mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan(specs=[
+        FaultSpec("straggler", start=2, end=9, factor=4.0, p=0.5),
+        FaultSpec("dispatch", start=1, end=20, target="fused", count=3),
+        FaultSpec("handoff", count=2, delay_s=0.01),
+        FaultSpec("pool_squeeze", start=5, end=12, blocks=4),
+    ], seed=11)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.seed == plan.seed
+    assert back.specs == plan.specs
+
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultSpec("meteor_strike")
+    with pytest.raises(ValueError):
+        FaultSpec("dispatch", target="warp_core")
+
+
+def test_injection_is_deterministic(setup):
+    """Same plan + seed on fresh servers: identical injection counts,
+    transitions, and token streams (the chaos gates depend on this)."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    plan = FaultPlan(specs=[
+        FaultSpec("dispatch", start=1, end=15, target="fused", count=2),
+        FaultSpec("straggler", start=5, end=30, factor=4.0, p=0.4),
+    ], seed=13)
+    runs = []
+    for _ in range(2):
+        server, fe, _ = replay(
+            cfg, params, clone(trace), prompts, check=True,
+            faults=FaultInjector(plan),
+            guard=SLOGuard(GuardConfig(cooldown_cycles=12)))
+        runs.append((dict(server.faults.injected), dict(server.outputs),
+                     [(t["cycle"], t["transition"])
+                      for t in server.guard.transitions]))
+    assert runs[0] == runs[1]
+    assert runs[0][0]          # something actually fired
+
+
+# ---------------------------------------------------------------------------
+# degradation lattice: triggers, recovery, stream identity
+# ---------------------------------------------------------------------------
+
+def test_dispatch_failures_degrade_fused_and_recover(setup):
+    """Consecutive fused dispatch failures degrade fused -> serial; the
+    run completes, probes back to fused, and every token stream matches
+    the fault-free replay (degraded modes are numerics references)."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    s0, _, m0 = replay(cfg, params, clone(trace), prompts)
+    assert m0.n_requests == len(trace)
+
+    plan = FaultPlan(specs=[
+        FaultSpec("dispatch", start=1, end=30, target="fused", count=2),
+    ], seed=5)
+    guard = SLOGuard(GuardConfig(cooldown_cycles=8))
+    s1, fe1, m1 = replay(cfg, params, clone(trace), prompts, check=True,
+                         faults=FaultInjector(plan), guard=guard)
+    s1.check_invariants()
+    kinds = [t["transition"] for t in guard.transitions]
+    assert "degrade:fused" in kinds
+    assert kinds.count("degrade:fused") == kinds.count("restore:fused")
+    assert guard.recovered and s1.fused
+    assert s1.stats.dispatch_failures == 2
+    assert m1.n_requests == len(trace)
+    assert dict(s1.outputs) == dict(s0.outputs)
+
+
+def test_straggler_cycles_trigger_degrade(setup):
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    plan = FaultPlan(specs=[
+        FaultSpec("straggler", start=2, end=40, factor=5.0, p=0.6),
+    ], seed=3)
+    guard = SLOGuard(GuardConfig(cooldown_cycles=10))
+    s, _, m = replay(cfg, params, clone(trace), prompts, check=True,
+                     faults=FaultInjector(plan), guard=guard)
+    assert m.n_requests == len(trace)
+    degr = [t for t in guard.transitions
+            if t["transition"] == "degrade:fused"]
+    assert degr and "straggler" in degr[0]["reason"]
+    assert guard.recovered
+
+
+def test_sustained_divergence_triggers_degrade(setup):
+    """Estimator drift below the straggler factor but above the mean
+    rel-error threshold is caught by the divergence window."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    plan = FaultPlan(specs=[
+        FaultSpec("drift", start=1, end=60, factor=2.5),
+    ], seed=3)
+    guard = SLOGuard(GuardConfig(divergence_window=8, cooldown_cycles=10))
+    s, _, m = replay(cfg, params, clone(trace), prompts, check=True,
+                     faults=FaultInjector(plan), guard=guard)
+    assert m.n_requests == len(trace)
+    degr = [t for t in guard.transitions
+            if t["transition"] == "degrade:fused"]
+    assert degr and "divergence" in degr[0]["reason"]
+    assert guard.recovered
+
+
+def test_serial_dispatch_failures_degrade_paged_roundtrip(setup):
+    """When the serial path itself fails, the last rung swaps paged
+    kernels for the dense reference (vacating fused first), finishes the
+    work, and probes back — streams identical to fault-free."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg, n=6)
+    s0, _, _ = replay(cfg, params, clone(trace), prompts)
+
+    plan = FaultPlan(specs=[
+        FaultSpec("dispatch", start=1, end=40, target="prefill", count=2),
+    ], seed=5)
+    guard = SLOGuard(GuardConfig(cooldown_cycles=6))
+    s1, _, m1 = replay(cfg, params, clone(trace), prompts, check=True,
+                       faults=FaultInjector(plan), guard=guard)
+    s1.check_invariants()
+    kinds = [t["transition"] for t in guard.transitions]
+    assert "degrade:paged" in kinds and "degrade:fused" in kinds
+    assert guard.recovered and s1.paged and s1.fused
+    assert m1.n_requests == len(trace)
+    assert dict(s1.outputs) == dict(s0.outputs)
+
+
+# ---------------------------------------------------------------------------
+# deadlines and cancellation (incl. the mid-prefill leak regression)
+# ---------------------------------------------------------------------------
+
+def test_total_deadline_cancels_and_frees_pages(setup):
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    for r in trace:
+        r.output_len = 24               # long decodes blow the deadline
+    obs = Observability()
+    guard = SLOGuard(GuardConfig(deadline_total_s=0.012))
+    server, fe, m = replay(cfg, params, clone(trace), prompts, check=True,
+                           cost=False, guard=guard, obs=obs, max_len=64)
+    assert server.stats.cancelled > 0
+    assert m.n_cancelled == server.stats.cancelled
+    assert server.pool.free_blocks == server.pool.n_blocks
+    for r in fe.requests:
+        assert r.phase in (Phase.FINISHED, Phase.CANCELLED)
+        if r.phase == Phase.CANCELLED:
+            assert r.cancel_reason == "total_deadline"
+            span = obs.spans.get(r.rid)
+            assert span is not None and span.count("cancel") == 1
+    server.check_invariants()
+
+
+def test_ttft_deadline_cancels_queued_requests(setup):
+    """A TTFT deadline shorter than the prefill backlog cancels requests
+    that never reached their first token — none leak pool pages."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    guard = SLOGuard(GuardConfig(deadline_ttft_s=0.004))
+    server, fe, m = replay(cfg, params, clone(trace), prompts, check=True,
+                           cost=False, guard=guard)
+    assert server.stats.cancelled > 0
+    for r in fe.requests:
+        if r.phase == Phase.CANCELLED:
+            assert r.cancel_reason == "ttft_deadline"
+            assert r.first_token_time is None
+    assert server.pool.free_blocks == server.pool.n_blocks
+    server.check_invariants()
+
+
+def test_mid_prefill_cancel_defers_and_frees(setup):
+    """Cancelling a request whose prefill group is in flight must not
+    tear device state mid-launch: the cancel is deferred to the group
+    boundary, where its pages are freed and the slot cleared (the leak
+    regression the engine's check_invariants now guards)."""
+    cfg, params = setup
+    obs = Observability()
+    server = mk_server(cfg, params, obs=obs)
+    rng = np.random.default_rng(2)
+    r0 = Request(rid=0, arrival=0.0, prompt_len=12, output_len=6)
+    r1 = Request(rid=1, arrival=0.0, prompt_len=8, output_len=4)
+    server.submit(r0, rng.integers(0, cfg.vocab_size, 12))
+    server.submit(r1, rng.integers(0, cfg.vocab_size, 8))
+    now = 0.0
+    while r0.phase != Phase.PREFILL:
+        server.step(now)
+        now += 1e-3
+    assert server.ptask is not None
+    server.cancel_request(r0, now, why="operator")
+    assert r0.phase == Phase.PREFILL        # deferred, not torn down
+    assert r0.cancel_reason == "operator"
+    server.check_invariants()               # pages still owned — no leak yet
+    server.run()
+    assert r0.phase == Phase.CANCELLED
+    assert r1.phase == Phase.FINISHED
+    assert not server.outputs.get(0)        # no tokens escaped the cancel
+    assert len(server.outputs[1]) == 4
+    assert server.pool.free_blocks == server.pool.n_blocks
+    server.check_invariants()
+    span = obs.spans.get(0)
+    assert span is not None and span.count("cancel") == 1
+
+
+def test_preemption_storm_under_deadline_cancellations(setup):
+    """Tiny pool + deadline cancels: preempt -> resume churn interleaved
+    with guard cancellations, with the engine invariants and every
+    span's breakdown audited after every cycle."""
+    cfg, params = setup
+    obs = Observability()
+    guard = SLOGuard(GuardConfig(deadline_total_s=0.03))
+    server = mk_server(cfg, params, max_slots=2, max_len=40,
+                       max_prefill_batch=1, guard=guard, obs=obs)
+    server.pool = PagedKVPool(48, block_size=16)    # 3 blocks of pressure
+    rng = np.random.default_rng(1)
+
+    def audit():
+        server.check_invariants()
+        for span in obs.spans.all():
+            b = span.breakdown()
+            assert b["preempts"] >= b["resumes"]
+            assert b.get("queue_s", 0.0) >= 0.0
+            if "ttft_s" in b:
+                assert b["ttft_s"] >= 0.0
+
+    young = Request(rid=0, arrival=0.5, prompt_len=8, output_len=30)
+    server.submit(young, rng.integers(0, cfg.vocab_size, 8))
+    now = 0.5
+    while young.phase != Phase.DECODE:
+        server.step(now)
+        audit()
+        now += 1e-3
+    for _ in range(3):                      # build a prefix worth resuming
+        server.step(now)
+        audit()
+        now += 1e-3
+    # an older arrival under pool pressure evicts the young decode...
+    old = Request(rid=1, arrival=0.49, prompt_len=30, output_len=4)
+    server.submit(old, rng.integers(0, cfg.vocab_size, 30))
+    while old.phase == Phase.QUEUED:
+        server.step(now)
+        audit()
+        now += 1e-3
+    assert server.stats.preempted >= 1
+    assert young.phase == Phase.QUEUED
+    # ...and the churning victim ages past its total deadline while the
+    # evictor runs: the guard cancels it wherever the storm left it
+    for _ in range(400):
+        if server.idle:
+            break
+        server.step(now)
+        audit()
+        now += 1e-3
+    assert server.idle
+    assert old.phase == Phase.FINISHED
+    assert young.phase == Phase.CANCELLED
+    assert server.stats.cancelled == 1
+    assert server.pool.free_blocks == server.pool.n_blocks
+    assert obs.spans.get(0).breakdown()["preempts"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# admission backpressure (bounded queue -> retry -> shed)
+# ---------------------------------------------------------------------------
+
+def test_admission_backpressure_sheds_after_retries(setup):
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    for r in trace:
+        r.arrival = 0.0                     # burst: everyone at once
+    obs = Observability()
+    guard = SLOGuard(GuardConfig(max_queue=1, max_submit_retries=0))
+    server, fe, m = replay(cfg, params, clone(trace), prompts, check=True,
+                           guard=guard, obs=obs)
+    assert fe.shed                          # the burst overran the bound
+    assert server.stats.shed == len(fe.shed)
+    for r in fe.requests:
+        if r.rid in fe.shed:
+            assert r.phase == Phase.CANCELLED
+            assert r.cancel_reason == "shed"
+            assert obs.spans.get(r.rid).count("shed") == 1
+        else:
+            assert r.phase == Phase.FINISHED
+    assert m.n_requests == len(trace) - len(fe.shed)
+    assert server.pool.free_blocks == server.pool.n_blocks
+
+
+def test_admission_retry_admits_when_queue_drains(setup):
+    """With a retry budget, backpressured submits re-enter once the
+    engine drains the queue — nothing is shed and every request
+    finishes."""
+    cfg, params = setup
+    trace, prompts = small_trace(cfg, n=6)
+    for r in trace:
+        r.arrival = 0.0
+    guard = SLOGuard(GuardConfig(max_queue=2, max_submit_retries=50,
+                                 retry_after_s=0.002))
+    server, fe, m = replay(cfg, params, clone(trace), prompts, check=True,
+                           guard=guard)
+    assert not fe.shed
+    assert m.n_requests == len(trace)
+    assert not fe.truncated
+
+
+# ---------------------------------------------------------------------------
+# cycle-budget exhaustion (timed_out bookkeeping)
+# ---------------------------------------------------------------------------
+
+def test_max_cycles_exhaustion_marks_timed_out(setup):
+    cfg, params = setup
+    trace, prompts = small_trace(cfg)
+    obs = Observability()
+    server, fe, m = replay(cfg, params, clone(trace), prompts,
+                           obs=obs, max_cycles=6)
+    assert fe.truncated
+    assert fe.timed_out                     # in-flight work was surfaced
+    for rid in fe.timed_out:
+        span = obs.spans.get(rid)
+        assert span is not None and span.count("timed_out") == 1
+    snap = obs.registry.snapshot()
+    assert snap["bullet_requests_timed_out_total"] == len(fe.timed_out)
+    assert snap["bullet_replay_truncated"] == 1.0
+    report = run_report(server, m)
+    assert "WARNING" in report and "max_cycles" in report
+    obs.spans.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# invariant audit actually bites
+# ---------------------------------------------------------------------------
+
+def test_check_invariants_catches_leaked_table(setup):
+    cfg, params = setup
+    trace, prompts = small_trace(cfg, n=4)
+    server, _, _ = replay(cfg, params, clone(trace), prompts)
+    server.check_invariants()               # clean after a drained run
+    server.pool.allocate(999, 16)           # orphan table: no owner slot
+    with pytest.raises(AssertionError, match="leak"):
+        server.check_invariants()
+    server.pool.free(999)
+    server.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# cross-mesh handoff failures (CI tier1-multidevice)
+# ---------------------------------------------------------------------------
+
+def chip_server(cfg, params, devices, **kw):
+    kw.setdefault("slo", SLO(3.0, 150.0))
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("max_prefill_batch", 1)
+    kw.setdefault("sched", SchedulerConfig(max_decode_pause_cycles=0))
+    return BulletServer(cfg, params, partition="chip",
+                        devices=devices[:2], **kw)
+
+
+def chip_replay(cfg, params, devices, n=4, **kw):
+    rng = np.random.default_rng(3)
+    reqs = [(rid, 0.0, int(rng.integers(4, 14)), 6) for rid in range(n)]
+    prompts = {rid: rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+               for rid, _, plen, _ in reqs}
+    server = chip_server(cfg, params, devices, **kw)
+    fe = OnlineFrontend(server, VirtualClock(),
+                        cycle_cost=estimator_cycle_cost,
+                        on_cycle=lambda s, t: s.check_invariants())
+    for rid, arr, plen, olen in reqs:
+        fe.submit(Request(rid=rid, arrival=arr, prompt_len=plen,
+                          output_len=olen), prompts[rid])
+    m = fe.run()
+    return server, fe, m
+
+
+@pytest.mark.multidevice
+def test_transient_handoff_failure_retries_through(setup, chip_devices):
+    """A handoff that fails under the retry budget is retried with
+    backoff and succeeds — no degradation, streams identical to the
+    fault-free chip replay."""
+    cfg, params = setup
+    s0, _, m0 = chip_replay(cfg, params, chip_devices)
+    assert m0.n_requests == 4 and s0.stats.handoffs > 0
+
+    plan = FaultPlan(specs=[FaultSpec("handoff", count=2)], seed=1)
+    guard = SLOGuard(GuardConfig(cooldown_cycles=8))
+    s1, _, m1 = chip_replay(cfg, params, chip_devices,
+                            faults=FaultInjector(plan), guard=guard)
+    assert s1.stats.handoff_retries == 2
+    assert s1.stats.prefill_aborts == 0
+    assert not guard.transitions            # absorbed below the trigger
+    assert m1.n_requests == 4
+    assert dict(s1.outputs) == dict(s0.outputs)
+
+
+@pytest.mark.multidevice
+def test_exhausted_handoff_degrades_chip_to_tile(setup, chip_devices):
+    """A handoff failing past the retry budget aborts the chip task and
+    degrades chip -> tile; the aborted requests re-prefill on the tile
+    path and the run still completes with identical streams."""
+    cfg, params = setup
+    s0, _, _ = chip_replay(cfg, params, chip_devices)
+
+    plan = FaultPlan(specs=[FaultSpec("handoff", start=0, end=4)], seed=1)
+    guard = SLOGuard(GuardConfig(cooldown_cycles=6))
+    s1, fe1, m1 = chip_replay(cfg, params, chip_devices,
+                              faults=FaultInjector(plan), guard=guard)
+    kinds = [t["transition"] for t in guard.transitions]
+    assert "degrade:chip" in kinds
+    assert s1.stats.prefill_aborts >= 1
+    assert s1.stats.handoff_retries >= guard.cfg.handoff.max_retries
+    assert guard.recovered and s1.partition == "chip"
+    assert m1.n_requests == 4
+    assert dict(s1.outputs) == dict(s0.outputs)
+    assert s1.pool.free_blocks == s1.pool.n_blocks
+
+
+@pytest.mark.multidevice
+def test_chip_mid_prefill_cancel_frees_staged_pages(setup, chip_devices):
+    """Cancelling mid-prefill on the chip path: the staged pages never
+    cross the mesh boundary — freed at the group boundary before the
+    handoff, with the survivor's handoff unaffected."""
+    cfg, params = setup
+    server = chip_server(cfg, params, chip_devices, max_prefill_batch=2)
+    rng = np.random.default_rng(2)
+    r0 = Request(rid=0, arrival=0.0, prompt_len=12, output_len=6)
+    r1 = Request(rid=1, arrival=0.0, prompt_len=8, output_len=4)
+    server.submit(r0, rng.integers(0, cfg.vocab_size, 12))
+    server.submit(r1, rng.integers(0, cfg.vocab_size, 8))
+    now = 0.0
+    while r0.phase != Phase.PREFILL:
+        server.step(now)
+        now += 1e-3
+    assert server.ptask is not None and server.ptask.granularity == "chip"
+    server.cancel_request(r0, now, why="operator")
+    server.run()
+    assert r0.phase == Phase.CANCELLED
+    assert r1.phase == Phase.FINISHED
+    assert not server.outputs.get(0)
+    assert server.stats.handoffs == 1       # only the survivor crossed
+    assert server.pool.free_blocks == server.pool.n_blocks
+    server.check_invariants()
