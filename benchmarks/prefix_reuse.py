@@ -1,0 +1,130 @@
+"""Shared-prefix KV reuse gate: multi-turn replay, sharing on vs off.
+
+The same closed-loop interaction workload
+(``serving/workload.py::generate_interactions`` — each turn's prompt is
+the previous turn's prompt plus its actual answer plus fresh user
+tokens, so consecutive turns overlap heavily) replays through the
+``OnlineFrontend`` against two servers that differ only in
+``CacheConfig(share_prefix=...)``. The gate asserts the docs/KV_SHARING.md
+acceptance bar:
+
+- token streams byte-identical between the two runs;
+- >= 2x fewer prefilled tokens with sharing on (the workload's turn
+  overlap is >= 50%, so the mapped prefix dominates);
+- estimator-priced goodput and virtual-clock makespan no worse;
+- pool + engine invariants audited after every cycle.
+
+Artifact: ``BENCH_prefix_reuse.json`` (uploaded by the CI bench-smoke
+job). ``REPRO_SMOKE=1`` shrinks the session count for the smoke step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import numpy as np
+
+JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_prefix_reuse.json"
+
+#: acceptance: prefilled-token reduction factor at >= 50% turn overlap
+MIN_REDUCTION = 2.0
+
+
+def _replay(cfg, params, *, share: bool, n_sessions: int, seed: int):
+    from repro.core.config import CacheConfig, ServerConfig
+    from repro.core.engine import BulletServer
+    from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                        estimator_cycle_cost)
+    from repro.serving.request import Phase, WORKLOAD_SLOS
+    from repro.serving.workload import generate_interactions
+
+    server = BulletServer(cfg, params, config=ServerConfig(
+        slo=WORKLOAD_SLOS["sharegpt"], max_slots=4, max_len=64,
+        cache=CacheConfig(paged=True, page_size=4, share_prefix=share)))
+    fe = OnlineFrontend(
+        server, VirtualClock(), cycle_cost=estimator_cycle_cost,
+        on_cycle=lambda s, now: s.check_invariants())
+    # turns=4 -> every session runs 2-4 turns, so follow-up prompts
+    # (history + answer + ~6 fresh tokens) dominate and the workload's
+    # cross-turn overlap clears the >= 50% bar the gate assumes
+    sessions = generate_interactions(
+        n_sessions, rate_s=50.0, turns=4, new_tokens=6, output_tokens=4,
+        seed=seed)
+    fe.submit_interactions(sessions, cfg.vocab_size, seed=seed)
+    m = fe.run()
+    assert not fe.truncated
+    done = [r for r in fe.requests if r.phase == Phase.FINISHED]
+    streams = {r.rid: list(server.outputs[r.rid]) for r in done}
+    return dict(
+        streams=streams,
+        turns=len(fe.requests),
+        finished=len(done),
+        prefill_tokens=server.stats.prefill_tokens,
+        reused_tokens=server.stats.reused_prefill_tokens,
+        prefix_hits=server.stats.prefix_hits,
+        cow_copies=server.pool.ops.cow_copies,
+        goodput=0.0 if m.is_empty else m.goodput,
+        makespan_s=fe.clock.now(),
+    )
+
+
+def run(emit) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    n_sessions = 3 if smoke else 8
+    seed = 11
+
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    off = _replay(cfg, params, share=False, n_sessions=n_sessions,
+                  seed=seed)
+    on = _replay(cfg, params, share=True, n_sessions=n_sessions, seed=seed)
+
+    emit("mode,turns,finished,prefill_tokens,reused_tokens,prefix_hits,"
+         "cow_copies,goodput,makespan_s")
+    for mode, r in (("off", off), ("on", on)):
+        emit(f"{mode},{r['turns']},{r['finished']},{r['prefill_tokens']},"
+             f"{r['reused_tokens']},{r['prefix_hits']},{r['cow_copies']},"
+             f"{r['goodput']:.3f},{r['makespan_s']:.4f}")
+
+    assert on["streams"] == off["streams"], \
+        "sharing changed the token streams"
+    assert on["finished"] == off["finished"] > 0
+    assert on["prefix_hits"] > 0 and on["reused_tokens"] > 0
+    reduction = off["prefill_tokens"] / max(on["prefill_tokens"], 1)
+    assert reduction >= MIN_REDUCTION, (
+        f"prefill-token reduction {reduction:.2f}x < {MIN_REDUCTION}x "
+        f"({off['prefill_tokens']} -> {on['prefill_tokens']})")
+    assert on["goodput"] >= off["goodput"] - 1e-9, \
+        "sharing must not cost goodput"
+    assert on["makespan_s"] <= off["makespan_s"] + 1e-9, \
+        "suffix-only prefill must not slow the replay"
+
+    overlap = on["reused_tokens"] / max(
+        on["reused_tokens"] + on["prefill_tokens"], 1)
+    emit(f"prefix_reuse-headline,reduction_x,{reduction:.2f},"
+         f"overlap,{overlap:.2f},"
+         f"goodput_on,{on['goodput']:.3f},goodput_off,{off['goodput']:.3f}")
+
+    doc = dict(
+        smoke=smoke, n_sessions=n_sessions, seed=seed,
+        reduction_x=round(reduction, 3), overlap=round(float(overlap), 3),
+        off={k: v for k, v in off.items() if k != "streams"},
+        on={k: v for k, v in on.items() if k != "streams"},
+        streams_identical=True,
+    )
+    JSON_PATH.write_text(json.dumps(doc, indent=2, sort_keys=True))
+    emit(f"wrote {JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -25,6 +25,7 @@ BENCHES = [
     ("paged_decode", "benchmarks.paged_decode_attention"),
     ("fused_vs_serial", "benchmarks.fused_vs_serial"),
     ("obs_overhead", "benchmarks.obs_overhead"),
+    ("prefix_reuse", "benchmarks.prefix_reuse"),
     ("chaos_replay", "benchmarks.chaos_replay"),
     ("roofline", "benchmarks.roofline_table"),
 ]

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Callable, Deque, Dict, List, NamedTuple, Optional, Tuple
@@ -40,6 +41,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import analytics
+from repro.core.config import ServerConfig
 from repro.core.estimator import (CycleObservation, OnlineRefitter,
                                   PerfEstimator, predict_cycle)
 from repro.core.metadata import MetadataBuffer
@@ -200,6 +202,47 @@ def _scatter_group_pages(cache_leaf, kv, page_map, rep):
     return T.scatter_prefill_pages(cache_leaf, kv, page_map, rep=rep)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_group_shared(params_slice, x, positions, cache_blocks,
+                          prefix_map, prefix_lens, rep, *, cfg: ModelConfig):
+    """Run one pattern-repeat group over a *suffix* batch whose leading
+    ``prefix_lens`` tokens are served from shared pages (docs/KV_SHARING.md):
+    per layer, gather the prefix KV from repeat ``rep`` of the page pool
+    via ``prefix_map`` (B, Lp) and attend prefix+suffix jointly. Returns
+    the suffix's own KV entries for page scatter. The pool is read-only
+    here (gather, no donation) — the caller scatters separately."""
+    b = prefix_map.shape[0]
+    entries = []
+    for j, blk in enumerate(cfg.pattern):
+        leaf = cache_blocks[j]
+        k_pre = leaf["k"][rep][prefix_map]
+        v_pre = leaf["v"][rep][prefix_map]
+        k_pre = k_pre.reshape(b, -1, *k_pre.shape[3:])
+        v_pre = v_pre.reshape(b, -1, *v_pre.shape[3:])
+        x, entry = T._apply_block_prefix(
+            x, params_slice[j], blk, cfg, None, positions,
+            k_pre, v_pre, prefix_lens)
+        entries.append((entry["k"], entry["v"]))
+    return x, tuple(entries)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_suffix_group_pages(cache_leaf, kv, page_map, offsets, rep):
+    """Scatter one layer group's *suffix* K/V into pooled pages at a
+    per-row page offset (read-modify-write so copy-on-write prefixes below
+    the offset survive). Jitted delegate of
+    :func:`repro.models.transformer.scatter_suffix_pages`."""
+    return T.scatter_suffix_pages(cache_leaf, kv, page_map, offsets, rep=rep)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pages(cache_leaf, src, dst):
+    """Copy-on-write materialization: duplicate pages ``src`` into ``dst``
+    across every repeat of one layer's pool, before the first divergent
+    write lands in ``dst`` (docs/KV_SHARING.md)."""
+    return cache_leaf.at[:, dst].set(cache_leaf[:, src])
+
+
 # ---------------------------------------------------------------------------
 
 @dataclass
@@ -229,6 +272,12 @@ class EngineStats:
     dispatch_failures: int = 0
     degrades: int = 0
     restores: int = 0
+    #: shared-prefix KV reuse (docs/KV_SHARING.md): tokens the prefill
+    #: engine actually computed (unshared suffixes), tokens served from
+    #: shared pages instead, and admissions that hit the prefix index
+    prefill_tokens: int = 0
+    reused_prefill_tokens: int = 0
+    prefix_hits: int = 0
 
 
 class DecodeWork(NamedTuple):
@@ -282,23 +331,66 @@ class PrefillTask:
     #: sharding the task's device state currently lives on (chip-enabled
     #: serving only; None = default placement)
     sharding: Optional[object] = None
+    #: shared-prefix reuse (docs/KV_SHARING.md): when set, ``x``/``positions``
+    #: /``lengths`` cover only each request's unshared suffix. prefix_map
+    #: (B, Lp) gathers the reused pages (incl. the copy-on-write tail),
+    #: prefix_lens (B,) the reused token counts, scatter_offsets (B,) the
+    #: in-page slot of each row's first suffix token.
+    prefix_map: Optional[jax.Array] = None
+    prefix_lens: Optional[jax.Array] = None
+    scatter_offsets: Optional[jax.Array] = None
+    reused_tokens: int = 0                # sum of prefix_lens
 
 
 class BulletServer:
     """Single-host Bullet serving runtime over a real JAX model."""
 
-    def __init__(self, cfg: ModelConfig, params, *, slo: SLO,
-                 est: Optional[PerfEstimator] = None,
-                 max_slots: int = 8, max_len: int = 128,
-                 max_prefill_batch: int = 4,
-                 sched: SchedulerConfig = SchedulerConfig(),
-                 dtype=jnp.float32, paged: Optional[bool] = None,
-                 page_size: int = 16, fused: Optional[bool] = None,
-                 refit=None, refit_interval: int = 32,
-                 partition: str = "tile", devices=None,
-                 obs: Optional[Observability] = None,
-                 faults: Optional[FaultInjector] = None,
-                 guard=None):
+    def __init__(self, cfg: ModelConfig, params, *,
+                 config: Optional[ServerConfig] = None, **legacy):
+        """Construct from a grouped :class:`ServerConfig` (the documented
+        surface — see docs/KV_SHARING.md and docs/TUNING.md):
+
+            BulletServer(cfg, params, config=ServerConfig(slo=SLO(...)))
+
+        The historical flat kwargs (slo=, paged=, fused=, …) still work
+        for one release through a deprecation shim that forwards them via
+        ``ServerConfig.from_legacy`` and warns."""
+        if legacy:
+            if config is not None:
+                raise TypeError("pass either config=ServerConfig(...) or "
+                                "the legacy flat kwargs, not both")
+            config = ServerConfig.from_legacy(legacy)
+            warnings.warn(
+                "BulletServer(**kwargs) is deprecated; group the options "
+                "in a repro.core.config.ServerConfig and pass config=...",
+                DeprecationWarning, stacklevel=2)
+        elif config is None:
+            config = ServerConfig()
+        if config.slo is None:
+            raise TypeError("an SLO is required: pass "
+                            "config=ServerConfig(slo=SLO(...))")
+        self.config = config
+        slo: SLO = config.slo
+        est = config.est
+        max_slots = config.max_slots
+        max_len = config.max_len
+        max_prefill_batch = config.max_prefill_batch
+        # None -> a per-server SchedulerConfig(): a shared module-level
+        # default instance would leak `replace(sched, fused=...)`-adjacent
+        # mutations across servers
+        sched = config.control.sched or SchedulerConfig()
+        dtype = config.dtype if config.dtype is not None else jnp.float32
+        paged = config.cache.paged
+        page_size = config.cache.page_size
+        share_prefix = config.cache.share_prefix
+        fused = config.execution.fused
+        partition = config.execution.partition
+        devices = config.execution.devices
+        refit = config.control.refit
+        refit_interval = config.control.refit_interval
+        obs = config.obs
+        faults = config.faults
+        guard = config.guard
         if cfg.pattern_tail:
             raise NotImplementedError(
                 "BulletServer's layer-group loop does not handle "
@@ -327,12 +419,24 @@ class BulletServer:
         #: the cycle event awaiting its measured duration (the driver's
         #: record_cycle_actual completes it)
         self._open_cycle: Optional[CycleEvent] = None
-        self.pool = PagedKVPool(max_slots * max_len, block_size=page_size)
         if paged is None:
             paged = T.supports_paged_cache(cfg)
         elif paged and not T.supports_paged_cache(cfg):
             raise ValueError(f"{cfg.name}: pattern {cfg.pattern} cannot use "
                              "the block-paged cache (needs pure ATTN)")
+        if share_prefix:
+            if not paged:
+                raise ValueError(
+                    "share_prefix reuses pages of the block-paged pool; "
+                    "needs paged=True (docs/KV_SHARING.md)")
+            if partition != "tile":
+                raise ValueError(
+                    "share_prefix requires partition='tile': chip-granular "
+                    "tasks stage prompt KV in a separate per-mesh pool, "
+                    "which would leave shared pages pointing at garbage")
+        self.share_prefix = share_prefix
+        self.pool = PagedKVPool(max_slots * max_len, block_size=page_size,
+                                share_prefix=share_prefix)
         self.paged = paged
         self.page_size = page_size
         # fused spatial prefill+decode execution (§3.5): default wherever
@@ -454,6 +558,9 @@ class BulletServer:
         #: what the most recent step() actually executed — consumed by
         #: virtual-clock replay to charge exactly the work that ran
         self.last_prefill_tokens: int = 0
+        #: of which, tokens served from shared prefix pages (the cycle's
+        #: prefill started at this context offset — estimator charging)
+        self.last_reused_tokens: int = 0
         self.last_decode: Optional[DecodeWork] = None
         #: True when the last step ran the fused spatial cycle (replay then
         #: charges the Eq. 2 co-located max, not the serial sum)
@@ -663,6 +770,24 @@ class BulletServer:
         before a preemption (resumed requests recompute their KV over it)."""
         return r.prompt_len + len(self.outputs.get(r.rid, []))
 
+    def _seq_tokens(self, r: Request) -> np.ndarray:
+        """The token ids the prefill must cover (prompt + resume prefix)."""
+        seq = r._prompt                                     # type: ignore
+        prefix = self.outputs.get(r.rid)
+        if prefix:
+            seq = np.concatenate([seq, np.asarray(prefix, np.int32)])
+        return seq
+
+    def _written_tokens(self, r: Request) -> np.ndarray:
+        """The token ids whose KV actually sits in ``r``'s pages: prompt +
+        generated output minus the last sampled token (its KV is written
+        by the *next* decode iteration)."""
+        out = self.outputs.get(r.rid) or []
+        if not out:
+            return np.asarray(r._prompt, np.int32)          # type: ignore
+        return np.concatenate(
+            [r._prompt, np.asarray(out[:-1], np.int32)])    # type: ignore
+
     def _need_tokens(self, r: Request) -> int:
         """Pool reservation for a request: the full prompt (+ resume
         prefix) and output footprint, reserved at admission so decode can
@@ -715,21 +840,35 @@ class BulletServer:
             self._apply_reorder(
                 self.scheduler.reorder_pending(state, now,
                                                self._pending_meta()))
+        share = self.paged and self.share_prefix
         batch: List[Request] = []
+        batch_hit: Optional[bool] = None
         while (self.pending and len(batch) < self.max_prefill_batch
                and self._free_slot() is not None):
             r = self.pending[0]
             need = self._need_tokens(r)
+            if share:
+                # homogeneous batches only: cache-hit requests take the
+                # suffix-prefill path, misses take the plain path — mixing
+                # them would pad misses to hit geometry (and vice versa),
+                # perturbing the sharing-off numerics they must match
+                _, m_toks, cow = self.pool.match_prefix(
+                    self._seq_tokens(r))
+                hit = (m_toks + (cow[1] if cow else 0)) > 0
+                if batch_hit is not None and hit != batch_hit:
+                    break
             if not self.pool.can_admit(need):
                 if batch:
                     break
                 # evict only if the eligible victims' blocks actually
-                # cover the shortfall — never waste decode progress
+                # cover the shortfall — never waste decode progress (a
+                # victim's shared pages survive its preemption, so only
+                # sole-referenced blocks count toward the shortfall)
                 reclaimable = sum(
-                    len(self.pool.table(v.rid).blocks)
+                    self.pool.reclaimable_blocks(v.rid)
                     for v in self._preempt_candidates(r))
                 if (self.pool.blocks_for(need)
-                        > self.pool.free_blocks + reclaimable):
+                        > self.pool.available_blocks + reclaimable):
                     break
                 while (not self.pool.can_admit(need)
                        and self._preempt_for(r, now)):
@@ -737,7 +876,11 @@ class BulletServer:
                 if not self.pool.can_admit(need):
                     break
             slot = self._free_slot()
-            self.pool.allocate(r.rid, need)
+            self.pool.allocate(r.rid, need,
+                               prompt_tokens=(self._seq_tokens(r)
+                                              if share else None))
+            if share and batch_hit is None:
+                batch_hit = hit
             if r.prefill_start is None:
                 r.prefill_start = now
             r.phase = Phase.PREFILL
@@ -757,35 +900,44 @@ class BulletServer:
             return False
 
         lens = [self._resume_len(r) for r in batch]
-        plen = max(lens)
-        toks = np.zeros((len(batch), plen), np.int32)
-        for i, r in enumerate(batch):
-            seq = r._prompt                                 # type: ignore
-            prefix = self.outputs.get(r.rid)
-            if prefix:
-                seq = np.concatenate([seq, np.asarray(prefix, np.int32)])
-            toks[i, :lens[i]] = seq
-        lengths = jnp.asarray(lens)
-        x = _embed_prompt(self.params, jnp.asarray(toks), cfg=self.cfg)
-        positions = jnp.arange(plen)[None, :]
-        tmp_cache = page_map = None
-        if self.paged:
-            # route each request's prompt blocks to its pooled pages so
-            # layer groups scatter KV in place (no handoff copy)
-            self._tables_dirty = True
-            ps = self.page_size
-            page_map = np.full((len(batch), -(-plen // ps)),
-                               self._trash_page, np.int32)
-            for i, r in enumerate(batch):
-                blocks = self.pool.table(r.rid).blocks[:-(-lens[i] // ps)]
-                page_map[i, :len(blocks)] = blocks
-            page_map = jnp.asarray(page_map)
+        if share and batch_hit:
+            self.ptask = self._build_shared_task(batch, lens)
         else:
-            # temporary per-batch cache (migrated slot-wise at handoff)
-            tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
-                                     jax.tree.leaves(self.cache)[0].dtype)
-        self.ptask = PrefillTask(batch, x, positions, lengths, tmp_cache,
-                                 n_tokens=int(sum(lens)), page_map=page_map)
+            plen = max(lens)
+            toks = np.zeros((len(batch), plen), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, :lens[i]] = self._seq_tokens(r)
+            lengths = jnp.asarray(lens)
+            x = _embed_prompt(self.params, jnp.asarray(toks), cfg=self.cfg)
+            positions = jnp.arange(plen)[None, :]
+            tmp_cache = page_map = None
+            if self.paged:
+                # route each request's prompt blocks to its pooled pages so
+                # layer groups scatter KV in place (no handoff copy)
+                self._tables_dirty = True
+                ps = self.page_size
+                page_map = np.full((len(batch), -(-plen // ps)),
+                                   self._trash_page, np.int32)
+                for i, r in enumerate(batch):
+                    blocks = self.pool.table(r.rid).blocks[
+                        :-(-lens[i] // ps)]
+                    page_map[i, :len(blocks)] = blocks
+                page_map = jnp.asarray(page_map)
+            else:
+                # temporary per-batch cache (migrated slot-wise at handoff)
+                tmp_cache = T.init_cache(self.cfg, len(batch), self.max_len,
+                                         jax.tree.leaves(self.cache)[0].dtype)
+            self.ptask = PrefillTask(batch, x, positions, lengths, tmp_cache,
+                                     n_tokens=int(sum(lens)),
+                                     page_map=page_map)
+        task = self.ptask
+        self.stats.prefill_tokens += task.n_tokens
+        self.stats.reused_prefill_tokens += task.reused_tokens
+        if task.reused_tokens:
+            self.stats.prefix_hits += len(batch)
+            if self.obs.enabled:
+                self.obs.prefix_hits.inc(len(batch))
+                self.obs.prefix_reused_tokens.inc(task.reused_tokens)
         P = self.buffer.state.prefill
         P.active_rid = batch[0].rid
         P.started_at = now
@@ -793,6 +945,12 @@ class BulletServer:
         P.total_layers = self.cfg.n_layers
         P.n_tokens = self.ptask.n_tokens
         P.n_waiting = len(self.pending)
+        if self.obs.enabled:
+            for r in batch:
+                t = self.pool.table(r.rid)
+                if t is not None and t.shared_tokens:
+                    self.obs.spans.mark(r.rid, "prefix_hit", now,
+                                        reused=float(t.shared_tokens))
         if self._chip_enabled and self.partition != "tile":
             # pin the task's granularity for its lifetime (pages scatter
             # into one pool consistently): forced under partition="chip",
@@ -803,6 +961,60 @@ class BulletServer:
                 "chip" if self.partition == "chip"
                 else self.scheduler.preferred_granularity(self.buffer.state))
         return True
+
+    def _build_shared_task(self, batch: List[Request],
+                           lens: List[int]) -> PrefillTask:
+        """Build the PrefillTask for a batch whose every row hit the prefix
+        index (docs/KV_SHARING.md): activations cover only each request's
+        unshared suffix, positions start at the reuse boundary, and the
+        page maps split into a read-only prefix gather and a suffix scatter
+        that starts mid-page (after the copy-on-write tail, copied on
+        device here before any group launches)."""
+        ps = self.page_size
+        self._tables_dirty = True
+        tables = [self.pool.table(r.rid) for r in batch]
+        reused = [t.shared_tokens for t in tables]
+        s_lens = [ln - ru for ln, ru in zip(lens, reused)]
+        assert all(s > 0 for s in s_lens), (s_lens, reused)
+        n, sp = len(batch), max(s_lens)
+        toks = np.zeros((n, sp), np.int32)
+        positions = np.zeros((n, sp), np.int32)
+        offsets = np.zeros((n,), np.int32)
+        lp = max(-(-ru // ps) for ru in reused)
+        prefix_map = np.full((n, lp), self._trash_page, np.int32)
+        n_sc = max(-(-((ru % ps) + sp) // ps) for ru in reused)
+        page_map = np.full((n, n_sc), self._trash_page, np.int32)
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        for i, r in enumerate(batch):
+            ru = reused[i]
+            toks[i, :s_lens[i]] = self._seq_tokens(r)[ru:]
+            positions[i] = ru + np.arange(sp)
+            offsets[i] = ru % ps
+            blocks = tables[i].blocks
+            prefix_map[i, :-(-ru // ps)] = blocks[:-(-ru // ps)]
+            row = blocks[ru // ps:ru // ps + n_sc]
+            page_map[i, :len(row)] = row
+            for s_b, d_b in tables[i].cow_pairs:
+                cow_src.append(s_b)
+                cow_dst.append(d_b)
+        if cow_src:
+            # materialize COW tails across every repeat of every layer
+            # BEFORE the first group scatter splices suffix KV into them
+            src = jnp.asarray(np.asarray(cow_src, np.int32))
+            dst = jnp.asarray(np.asarray(cow_dst, np.int32))
+            for j in range(len(self.cfg.pattern)):
+                leaf = self.cache["blocks"][j]
+                leaf["k"] = _copy_pages(leaf["k"], src, dst)
+                leaf["v"] = _copy_pages(leaf["v"], src, dst)
+        x = _embed_prompt(self.params, jnp.asarray(toks), cfg=self.cfg)
+        return PrefillTask(
+            batch, x, jnp.asarray(positions), jnp.asarray(s_lens), None,
+            n_tokens=int(sum(s_lens)), page_map=jnp.asarray(page_map),
+            prefix_map=jnp.asarray(prefix_map),
+            prefix_lens=jnp.asarray(np.asarray(reused, np.int32)),
+            scatter_offsets=jnp.asarray(offsets),
+            reused_tokens=int(sum(reused)))
 
     def _prefill_step(self, now: float) -> bool:
         """Launch ONE pattern-repeat group of the in-flight prefill, with a
@@ -834,7 +1046,22 @@ class BulletServer:
             params = self._params_for(self._global_sharding)
         p_slice = jax.tree.map(lambda a: a[rep], params["blocks"],
                                is_leaf=lambda a: hasattr(a, "shape"))
-        if self.paged:
+        if self.paged and task.prefix_map is not None:
+            # shared-prefix suffix prefill: gather reused prefix KV from
+            # the page pool, attend prefix+suffix, splice the suffix KV
+            # back at each row's in-page offset (docs/KV_SHARING.md)
+            rep_ix = jnp.int32(rep)
+            task.x, kv_entries = _prefill_group_shared(
+                p_slice, task.x, task.positions, self.cache["blocks"],
+                task.prefix_map, task.prefix_lens, rep_ix, cfg=self.cfg)
+            pm, off = task.page_map, task.scatter_offsets
+            for j, (k_e, v_e) in enumerate(kv_entries):
+                leaf = self.cache["blocks"][j]
+                leaf["k"] = _scatter_suffix_group_pages(
+                    leaf["k"], k_e, pm, off, rep_ix)
+                leaf["v"] = _scatter_suffix_group_pages(
+                    leaf["v"], v_e, pm, off, rep_ix)
+        elif self.paged:
             task.x, kv_entries = _prefill_group_paged(
                 p_slice, task.x, task.positions, cfg=self.cfg)
             pm = task.page_map
@@ -859,6 +1086,7 @@ class BulletServer:
         task.rep += 1
         self.stats.prefill_cycles += 1
         self.last_prefill_tokens = task.n_tokens
+        self.last_reused_tokens = task.reused_tokens
         P = self.buffer.state.prefill
         P.layers_done = task.rep * len(self.cfg.pattern)
         for r in task.batch:
@@ -968,6 +1196,10 @@ class BulletServer:
             self.pos = self.pos.at[slot].set(r.prompt_len + r.generated - 1)
             self.active = self.active.at[slot].set(True)
             self.pool.migrate(r.rid)
+            if self.share_prefix and self.paged:
+                # index the freshly written pages so concurrent prompts
+                # can share them before this request even finishes
+                self.pool.register_prefix(r.rid, self._written_tokens(r))
             self.stats.migrated += 1
             if self.obs.enabled:
                 self.obs.spans.mark(r.rid, "migrate", now)
@@ -993,6 +1225,10 @@ class BulletServer:
             self.obs.requests_finished.inc()
             self.obs.spans.mark(r.rid, "finish", now,
                                 generated=float(r.generated))
+        if self.share_prefix and self.paged:
+            # extend the prefix index over the decode-written pages before
+            # releasing them (ref-0 indexed pages stay cached for hits)
+            self.pool.register_prefix(r.rid, self._written_tokens(r))
         self.pool.free(r.rid)
         if self.paged:
             self._tables_dirty = True
@@ -1123,6 +1359,12 @@ class BulletServer:
             if r.rid in D.batch:
                 D.batch.remove(r.rid)
             self._drop_request_meta(r.rid)
+        if self.share_prefix:
+            # the device pages behind the prefix index are about to be
+            # reinitialized: drop the index and cached pages. All tables
+            # were just unwound, so no page has multiple live readers —
+            # flush_shared would refuse otherwise (docs/RESILIENCE.md)
+            self.pool.flush_shared()
         dtype = jax.tree.leaves(self.cache)[0].dtype
         self.paged = paged
         if paged:
@@ -1410,13 +1652,15 @@ class BulletServer:
                 "fused", self.last_prefill_tokens,
                 max(R.prefill_units, 1), max(R.decode_units, 1),
                 max(w.batch, 1), max(w.mean_context, 1),
-                tuple(w.streamed) or None)
+                tuple(w.streamed) or None,
+                reused_tokens=self.last_reused_tokens)
         return CycleObservation(
             "serial", self.last_prefill_tokens,
             R.prefill_units, R.decode_units,
             w.batch if w is not None else 0,
             max(w.mean_context, 1) if w is not None else 1,
-            (tuple(w.streamed) or None) if w is not None else None)
+            (tuple(w.streamed) or None) if w is not None else None,
+            reused_tokens=self.last_reused_tokens)
 
     def record_cycle_actual(self, actual_s: float) -> None:
         """Feed the measured duration of the cycle the last step() ran.
@@ -1525,6 +1769,7 @@ class BulletServer:
         if self.faults.enabled:
             self.faults.begin_cycle(self)
         self.last_prefill_tokens = 0
+        self.last_reused_tokens = 0
         self.last_decode = None
         self.last_fused = False
         self.last_chip = False
@@ -1535,6 +1780,7 @@ class BulletServer:
             # with the decode iteration concurrent on the disjoint one
             return self._chip_cycle(now) or did_admit
         if (self.fused and self.ptask is not None
+                and self.ptask.prefix_map is None
                 and bool(np.any(np.asarray(self.active)))):
             return self._fused_cycle(now) or did_admit
         did_p = self._prefill_step(now)

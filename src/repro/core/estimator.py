@@ -211,7 +211,8 @@ class PerfEstimator:
                          batch: int, ctx: int, *,
                          contexts: Optional[Sequence[int]] = None,
                          page_size: Optional[int] = None,
-                         layer_group: Optional[int] = None) -> float:
+                         layer_group: Optional[int] = None,
+                         ctx_start: int = 0) -> float:
         """One fused engine cycle: Eq. 2's co-located
         ``max(prefill, decode)/(1-s)`` for a prefill layer group and a
         decode iteration sharing the device spatially — never the serial
@@ -232,14 +233,15 @@ class PerfEstimator:
         if n_tokens <= 0 or batch <= 0:
             return self.serial_cycle_time(
                 cfg, n_tokens, batch, ctx, contexts=contexts,
-                page_size=page_size, layer_group=layer_group)
+                page_size=page_size, layer_group=layer_group,
+                ctx_start=ctx_start)
         U = self.hw.total_units
         u_p = max(1, min(prefill_units, U)) / U
         u_d = max(1, min(decode_units, U)) / U
         B = self.hw.total_bw * self.params.sustained_bw
         p_b = self.params.p_b
 
-        cp = _prefill_cost(cfg, n_tokens, 0, include_head=False)
+        cp = _prefill_cost(cfg, n_tokens, ctx_start, include_head=False)
         p_flops = cp.flops / cfg.n_layers * lg
         p_bytes = cp.hbm_bytes / cfg.n_layers * lg
         cd = _decode_cost_any(cfg, batch, max(ctx, 1), contexts, page_size)
@@ -263,7 +265,8 @@ class PerfEstimator:
                           batch: int, ctx: int, *,
                           contexts: Optional[Sequence[int]] = None,
                           page_size: Optional[int] = None,
-                          layer_group: Optional[int] = None) -> float:
+                          layer_group: Optional[int] = None,
+                          ctx_start: int = 0) -> float:
         """Temporal-sharing reference for the same engine cycle: the
         prefill layer group and the decode iteration dispatched
         back-to-back, each alone on the full machine (no partition, no
@@ -273,7 +276,7 @@ class PerfEstimator:
         U = self.hw.total_units
         t = 0.0
         if n_tokens > 0:
-            t += self.prefill_layer_time(cfg, n_tokens, 0, U,
+            t += self.prefill_layer_time(cfg, n_tokens, ctx_start, U,
                                          colocated=False) * lg
         if batch > 0:
             t += self.decode_iter_time(cfg, batch, max(ctx, 1), U,
@@ -301,7 +304,8 @@ class PerfEstimator:
                         contexts: Optional[Sequence[int]] = None,
                         page_size: Optional[int] = None,
                         layer_group: Optional[int] = None,
-                        handoff_tokens: float = 0.0) -> float:
+                        handoff_tokens: float = 0.0,
+                        ctx_start: int = 0) -> float:
         """One chip-granular engine cycle: the prefill layer group and the
         decode iteration run concurrently on *disjoint* sub-meshes, so the
         cycle is the MAX of the two sides' partitioned Eq. 2 times with NO
@@ -315,7 +319,7 @@ class PerfEstimator:
         t_p = t_d = 0.0
         if n_tokens > 0:
             t_p = self.prefill_layer_time(
-                cfg, int(n_tokens), 0, max(prefill_units, 1),
+                cfg, int(n_tokens), ctx_start, max(prefill_units, 1),
                 colocated=False) * lg
         if batch > 0 or contexts:
             t_d = self.decode_iter_time(
@@ -523,6 +527,10 @@ class CycleObservation(NamedTuple):
     finished prefill re-sharded its pages across the interconnect).
     ``contexts`` carries the per-slot KV tokens the decode side actually
     streamed (page-bucketed), exactly what virtual-clock replay charges.
+    ``reused_tokens`` counts shared-prefix KV tokens mapped instead of
+    prefilled (docs/KV_SHARING.md): ``n_tokens`` is the suffix the cycle
+    actually computed, and the reused span enters the prefill charge only
+    as the attention-context start offset (``ctx_start``).
     """
     kind: str                             # "fused" | "serial" | "chip"
     n_tokens: int                         # prefill tokens this cycle (0 = none)
@@ -533,6 +541,7 @@ class CycleObservation(NamedTuple):
     contexts: Optional[Tuple[int, ...]] = None   # streamed KV tokens per slot
     layer_group: Optional[int] = None     # layers launched (None = pattern)
     handoff_tokens: int = 0               # KV tokens re-sharded cross-mesh
+    reused_tokens: int = 0                # prefix KV tokens reused, not computed
 
 
 def predict_cycle(est: PerfEstimator, cfg: ModelConfig,
@@ -545,16 +554,19 @@ def predict_cycle(est: PerfEstimator, cfg: ModelConfig,
         return est.fused_cycle_time(
             cfg, obs.n_tokens, max(obs.prefill_units, 1),
             max(obs.decode_units, 1), max(obs.batch, 1), max(obs.ctx, 1),
-            contexts=obs.contexts, layer_group=obs.layer_group)
+            contexts=obs.contexts, layer_group=obs.layer_group,
+            ctx_start=obs.reused_tokens)
     if obs.kind == "chip":
         return est.chip_cycle_time(
             cfg, obs.n_tokens, max(obs.prefill_units, 1),
             max(obs.decode_units, 1), obs.batch, max(obs.ctx, 1),
             contexts=obs.contexts, layer_group=obs.layer_group,
-            handoff_tokens=obs.handoff_tokens)
+            handoff_tokens=obs.handoff_tokens,
+            ctx_start=obs.reused_tokens)
     return est.serial_cycle_time(
         cfg, obs.n_tokens, obs.batch, max(obs.ctx, 1),
-        contexts=obs.contexts, layer_group=obs.layer_group)
+        contexts=obs.contexts, layer_group=obs.layer_group,
+        ctx_start=obs.reused_tokens)
 
 
 class OnlineRefitter:

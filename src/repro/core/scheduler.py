@@ -82,12 +82,14 @@ class SLOScheduler:
     """Decentralized scheduler instance (one per engine, sharing state)."""
 
     def __init__(self, cfg: ModelConfig, est: PerfEstimator, slo: SLO,
-                 sched: SchedulerConfig = SchedulerConfig(),
+                 sched: Optional[SchedulerConfig] = None,
                  split_candidates: Optional[List[Tuple[int, int]]] = None):
         self.cfg = cfg
         self.est = est
         self.slo = slo
-        self.sc = sched
+        # None -> a fresh per-scheduler instance, never a shared
+        # module-level default object
+        self.sc = sched if sched is not None else SchedulerConfig()
         self.decode_paused_cycles = 0
         #: the engine's prebuilt partition table [(prefill_units,
         #: decode_units), ...] (one FusedExecutable each). When set, every

@@ -71,13 +71,14 @@ def _host(args):
     from repro.obs.report import run_report
     from repro.serving.request import Request, SLO
 
+    from repro.core.config import build_server_config
+
     cfg = get_config(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    server = BulletServer(cfg, params,
-                          slo=SLO(args.slo_ttft, args.slo_tpot),
-                          max_slots=args.slots, max_len=args.max_len,
-                          partition=args.partition, obs=Observability(),
-                          **_resilience_kwargs(args))
+    res = _resilience_kwargs(args)
+    server = BulletServer(cfg, params, config=build_server_config(
+        args, slo=SLO(args.slo_ttft, args.slo_tpot), obs=Observability(),
+        faults=res.get("faults"), guard=res.get("guard")))
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -117,12 +118,14 @@ def _replay(args):
     # same hardware spec as --mode sim (the sim additionally calibrates
     # via profiling and runs the full-size model on the unclamped trace —
     # benchmarks/replay_vs_sim.py holds both sides identical)
+    from repro.core.config import build_server_config
+
     est = PerfEstimator(HardwareSpec(n_chips=args.chips))
-    server = BulletServer(cfg, params, slo=slo, est=est,
-                          max_slots=args.slots, max_len=args.max_len,
-                          refit=not args.no_refit,
-                          partition=args.partition, obs=Observability(),
-                          **_resilience_kwargs(args))
+    res = _resilience_kwargs(args)
+    server = BulletServer(cfg, params, config=build_server_config(
+        args, slo=slo, est=est, refit=not args.no_refit,
+        obs=Observability(),
+        faults=res.get("faults"), guard=res.get("guard")))
     trace = fit_trace_to_context(
         generate_trace(args.dataset, args.rate, args.duration,
                        seed=args.seed, max_requests=args.requests),
@@ -206,6 +209,14 @@ def main():
                          "disjoint prefill/decode sub-meshes with KV "
                          "handoff (needs >= 2 devices); auto = per-task "
                          "combined-table argmin")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page in the paged pool")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="ref-counted shared-prefix KV page reuse: "
+                         "requests whose prompt matches resident pages "
+                         "map them read-only instead of re-prefilling "
+                         "(paged pool, tile partition only; "
+                         "docs/KV_SHARING.md)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the engine's per-cycle Chrome trace-event "
                          "JSON here (host/replay modes; open in Perfetto "

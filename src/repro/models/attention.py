@@ -141,6 +141,48 @@ def write_paged_kv(k_pages, v_pages, k_new, v_new, block_tables, pos):
     return k_pages, v_pages
 
 
+def prefix_suffix_attention(q, k_sfx, v_sfx, k_pre, v_pre, prefix_len,
+                            q_positions):
+    """Suffix prefill attending over a reused (gathered) KV prefix.
+
+    The shared-prefix prefill path (docs/KV_SHARING.md): a cache-hit
+    request recomputes only its unshared suffix, whose queries must attend
+    both the freshly projected suffix KV and the prefix KV already sitting
+    in shared pages.
+
+    q: (B, S, H, D) suffix queries at absolute positions ``q_positions``
+    (B, S); k_sfx/v_sfx: (B, S, K, D) the suffix's own KV; k_pre/v_pre:
+    (B, Lp, K, D) prefix KV gathered from the page pool, slot ``t`` valid
+    iff ``t < prefix_len[b]`` (slot index == absolute position, since
+    shared pages are prompt-aligned from 0). Padded suffix columns are
+    masked by causality: their positions exceed every valid query's.
+    Single-block evaluation (serving suffixes are short); mirrors
+    ``flash_ref_attention``'s op sequence so an empty prefix is
+    numerically identical to the plain prefill path.
+    """
+    b, sq, h, d = q.shape
+    lp = k_pre.shape[1]
+    scale = d ** -0.5
+    q = (q * scale).astype(q.dtype)
+    kc = jnp.concatenate([k_pre.astype(k_sfx.dtype), k_sfx], axis=1)
+    vc = jnp.concatenate([v_pre.astype(v_sfx.dtype), v_sfx], axis=1)
+    pre_pos = jnp.broadcast_to(jnp.arange(lp)[None], (b, lp))
+    pre_pos = jnp.where(pre_pos < prefix_len[:, None], pre_pos,
+                        jnp.iinfo(jnp.int32).max)
+    kv_pos = jnp.concatenate([pre_pos, q_positions], axis=1)  # (B, Lp+S)
+    logits = _gqa_logits(q, kc)                         # (B,K,G,Sq,Lp+S)
+    mask = kv_pos[:, None, :] <= q_positions[:, :, None]      # (B,Sq,Sk)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    m = logits.max(axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc
+                     ).astype(jnp.float32)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
 def _gqa_logits(q, k):
     """q: (B,Sq,H,D), k: (B,Sk,K,D) -> (B, K, H/K, Sq, Sk) fp32 logits."""
     b, sq, h, d = q.shape

@@ -677,6 +677,52 @@ def scatter_prefill_pages(pages, kv, page_map, rep=None):
     return pages.at[rep, page_map.reshape(-1)].set(kvb)
 
 
+def scatter_suffix_pages(pages, kv, page_map, offsets, rep=None):
+    """Scatter a *suffix* prefill's K or V (B, Ss, K, D) into a block-paged
+    pool at a per-row page offset (shared-prefix path, docs/KV_SHARING.md).
+
+    Row ``b``'s suffix starts mid-page: its first token lands in page
+    ``page_map[b, 0]`` at slot ``offsets[b]`` (the tail of a copy-on-write
+    page, whose copied prefix below the offset must survive). Read-modify-
+    write: gather the mapped pages, splice the suffix in at the offset
+    (vmapped dynamic_update_slice over the flattened token dim), scatter
+    the whole pages back. Rows pad with the trash page; a row's real pages
+    are disjoint from every other row's, so duplicate trash writes are the
+    only index collisions and their content is garbage by contract."""
+    ps = pages.shape[-3]
+    b, n_b = page_map.shape
+    src = pages[page_map] if rep is None else pages[rep][page_map]
+    flat = src.reshape(b, n_b * ps, *src.shape[3:])
+
+    def splice(f, knew, o):
+        return jax.lax.dynamic_update_slice(f, knew, (o, 0, 0))
+
+    flat = jax.vmap(splice)(flat, kv.astype(pages.dtype), offsets)
+    src = flat.reshape(b, n_b, ps, *src.shape[3:])
+    kvb = src.reshape(-1, ps, *src.shape[3:])
+    if rep is None:
+        return pages.at[page_map.reshape(-1)].set(kvb)
+    return pages.at[rep, page_map.reshape(-1)].set(kvb)
+
+
+def _apply_block_prefix(x, p, blk, cfg, policy, positions, k_pre, v_pre,
+                        prefix_lens):
+    """Prefill block application for a suffix continuing reused prefix KV
+    (docs/KV_SHARING.md). ``x`` (B, Ss, D) holds only the unshared suffix
+    at absolute ``positions`` (B, Ss); ``k_pre/v_pre`` (B, Lp, K, D) is
+    the prefix KV gathered from shared pages, valid below ``prefix_lens``.
+    Returns (x, {"k","v"}) with the *suffix's own* KV for page scatter."""
+    assert blk.mixer == ATTN, blk.mixer
+    h = L.rms_norm(x, p["ln1"], cfg.rmsnorm_eps)
+    q, k, v = _project_qkv(h, p, cfg, positions, policy)
+    o = attn_ops.prefix_suffix_attention(q, k, v, k_pre, v_pre,
+                                         prefix_lens, positions)
+    y = o.reshape(*o.shape[:2], -1) @ p["wo"]
+    x = x + y
+    y, _ = _ff(x, p, blk, cfg, policy)
+    return x + y, {"k": k, "v": v}
+
+
 def _apply_block_fused(x_p, x_d, p, blk, cfg, policy, positions_p, pos_d,
                        cache_entry, block_tables, page_map, decode_share):
     """Spatially-fused block application: one prefill layer of the current

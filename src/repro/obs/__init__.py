@@ -84,6 +84,13 @@ class Observability:
             "(internal fragmentation)")
         self.kv_free_blocks = r.gauge(
             "bullet_kv_free_blocks", "pool blocks currently free")
+        # shared-prefix reuse signals (docs/KV_SHARING.md)
+        self.prefix_hits = r.counter(
+            "bullet_prefix_hits_total",
+            "admitted requests that mapped shared-prefix pages")
+        self.prefix_reused_tokens = r.counter(
+            "bullet_prefix_reused_tokens_total",
+            "prompt tokens served from shared pages instead of prefill")
         # scheduler signals
         self.sched_decisions = r.counter(
             "bullet_scheduler_decisions_total",
@@ -178,7 +185,12 @@ class Observability:
         for name, v in (("alloc", pool.ops.allocs),
                         ("extend", pool.ops.extends),
                         ("free", pool.ops.frees),
-                        ("preempt", pool.ops.preempts)):
+                        ("preempt", pool.ops.preempts),
+                        ("shared_hit", pool.ops.shared_hits),
+                        ("reused_tokens", pool.ops.reused_tokens),
+                        ("cow_copy", pool.ops.cow_copies),
+                        ("eviction", pool.ops.evictions),
+                        ("register", pool.ops.registers)):
             self.registry.counter(
                 "bullet_kv_pool_ops_total", "page-pool table operations",
                 labels=("op",)).labels(op=name).value = float(v)

@@ -57,6 +57,9 @@ def run_report(server, metrics: Optional[ServingMetrics] = None,
             f"{int(snap.get('bullet_engine_cancelled_total', 0))} "
             f"cancelled, {int(snap.get('bullet_engine_shed_total', 0))} "
             "shed")
-    clean = server.pool.free_blocks == server.pool.n_blocks
+    # available_blocks counts ref-0 cached pages kept by shared-prefix
+    # reuse as reclaimable (they are evicted on demand), so a drained
+    # server reports clean with sharing on or off
+    clean = server.pool.available_blocks == server.pool.n_blocks
     lines.append(f"KV pool clean: {clean}")
     return "\n".join(lines)

@@ -22,8 +22,10 @@ comparable on the same trace.
 
 from __future__ import annotations
 
+import bisect
+import itertools
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -157,6 +159,59 @@ class OnlineFrontend:
         for r in trace:
             self.submit(r, rng.integers(0, vocab_size, r.prompt_len,
                                         dtype=np.int32))
+
+    def submit_interactions(self, sessions: Sequence, vocab_size: int,
+                            seed: int = 0) -> None:
+        """Closed-loop multi-turn replay of ``workload.Interaction``
+        sessions. Turn ``k+1``'s prompt is turn ``k``'s full prompt plus
+        its *actual* generated tokens plus fresh user tokens, so
+        consecutive turns of a session share a growing prefix — the
+        shared-prefix reuse workload (docs/KV_SHARING.md). Follow-up
+        turns are scheduled from the finishing turn's token callback and
+        inserted into the release queue in arrival order, so they work
+        under both clocks and never require a second run() pass.
+
+        Deterministic: each session draws from ``default_rng((seed,
+        session_id))``, and follow-up content depends only on the
+        engine's (deterministic) outputs."""
+        rid_counter = itertools.count(
+            max((r.rid for r in self.requests), default=-1) + 1)
+        for sess in sessions:
+            rng = np.random.default_rng((seed, sess.session_id))
+            self._launch_turn(sess.session_id, rng, tuple(sess.turns),
+                              np.zeros(0, np.int32), sess.arrival,
+                              vocab_size, rid_counter)
+
+    def _launch_turn(self, sid: int, rng, turns, history: np.ndarray,
+                     arrival: float, vocab_size: int, rid_counter) -> None:
+        max_len = self.server.max_len
+        turn, rest = turns[0], turns[1:]
+        fresh = rng.integers(0, vocab_size, turn.new_tokens, dtype=np.int32)
+        toks = np.concatenate([history, fresh]).astype(np.int32)
+        if len(toks) + 2 > max_len:
+            return                      # history outgrew the context window
+        out_len = max(1, min(turn.output_tokens, max_len - len(toks)))
+        req = Request(rid=next(rid_counter), arrival=arrival,
+                      prompt_len=len(toks), output_len=out_len)
+        outputs: List[int] = []
+
+        def on_tok(r: Request, token: int, now: float) -> None:
+            outputs.append(int(token))
+            done = (r.generated >= r.output_len
+                    or r.prompt_len + r.generated >= max_len)
+            if done and rest:
+                nxt = np.concatenate(
+                    [toks, np.asarray(outputs, np.int32)])
+                self._launch_turn(sid, rng, rest, nxt,
+                                  now + rest[0].think_time_s,
+                                  vocab_size, rid_counter)
+
+        self.requests.append(req)
+        # keep the release queue sorted past the release pointer; run()
+        # re-sorts everything submitted before it starts anyway
+        bisect.insort(self._queue, (req, toks), lo=self._i,
+                      key=lambda e: (e[0].arrival, e[0].rid))
+        self._cbs[req.rid] = on_tok
 
     def _dispatch(self, req: Request, token: int, now: float) -> None:
         cb = self._cbs.get(req.rid)

@@ -83,3 +83,58 @@ def generate_trace(dataset: str, rate_req_s: float, duration_s: float,
         if max_requests and rid >= max_requests:
             break
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# Multi-turn interactions (the shared-prefix reuse workload)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Turn:
+    """One turn of a chat session: ``new_tokens`` of fresh user prompt
+    appended to the full accumulated history, then ``output_tokens`` of
+    generation. The turn's effective prompt is history + new tokens, so
+    everything before the fresh suffix is a reuse candidate
+    (docs/KV_SHARING.md)."""
+    new_tokens: int
+    output_tokens: int
+    #: user think time between the previous turn finishing and this one
+    #: arriving (seconds)
+    think_time_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class Interaction:
+    """A closed-loop multi-turn session. Turn ``k+1`` cannot be issued
+    until turn ``k``'s output exists (its tokens are part of the next
+    prompt), so interactions replay through the frontend's
+    ``submit_interactions`` rather than as a flat open-loop trace."""
+    session_id: int
+    arrival: float          # arrival of the first turn
+    turns: tuple            # Tuple[Turn, ...]
+
+
+def generate_interactions(n_sessions: int, rate_s: float, *,
+                          turns: int = 3, new_tokens: int = 12,
+                          output_tokens: int = 6,
+                          think_time_s: float = 0.0,
+                          seed: int = 0) -> List[Interaction]:
+    """Poisson session arrivals; per-session turn shapes jittered around
+    the given means (±50%) so sessions diverge while still sharing their
+    own history. Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    out: List[Interaction] = []
+    t = 0.0
+    for sid in range(n_sessions):
+        t += rng.exponential(1.0 / rate_s)
+        n_turns = max(1, int(rng.integers(max(1, turns // 2), turns + 1)))
+        ts = []
+        for _ in range(n_turns):
+            nt = max(2, int(rng.integers(max(2, new_tokens // 2),
+                                         new_tokens + new_tokens // 2 + 1)))
+            ot = max(2, int(rng.integers(max(2, output_tokens // 2),
+                                         output_tokens + output_tokens // 2
+                                         + 1)))
+            ts.append(Turn(nt, ot, think_time_s))
+        out.append(Interaction(session_id=sid, arrival=t, turns=tuple(ts)))
+    return out

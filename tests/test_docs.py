@@ -15,7 +15,7 @@ def md_links(path: Path):
 
 def test_canonical_docs_exist():
     for name in ("ARCHITECTURE.md", "PERF_MODEL.md", "TUNING.md",
-                 "RESILIENCE.md"):
+                 "RESILIENCE.md", "KV_SHARING.md"):
         p = ROOT / "docs" / name
         assert p.is_file(), f"missing docs/{name}"
         assert len(p.read_text()) > 1500, f"docs/{name} is a stub"
@@ -28,6 +28,7 @@ def test_readme_links_docs_and_resolve():
     assert "docs/PERF_MODEL.md" in links
     assert "docs/TUNING.md" in links
     assert "docs/RESILIENCE.md" in links
+    assert "docs/KV_SHARING.md" in links
     for rel in links:
         assert (ROOT / rel).exists(), f"README links missing path {rel}"
 

@@ -1,0 +1,353 @@
+"""Ref-counted shared-prefix KV reuse (docs/KV_SHARING.md) and the
+grouped ServerConfig construction surface.
+
+Pool half: radix-index matching, copy-on-write tails, refcount-aware
+free/preempt/eviction, the ref-0 page cache, and a seeded random property
+run against ``check_invariants``. Engine half: multi-turn replays must be
+byte-identical with sharing on and off while prefilling strictly fewer
+tokens, the fused/chip paths must be gated off, and the legacy flat-kwarg
+shim must warn-but-work."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import (CacheConfig, ControlConfig, ExecConfig,
+                               ServerConfig)
+from repro.core.engine import BulletServer
+from repro.core.estimator import CycleObservation, PerfEstimator
+from repro.core.scheduler import SLOScheduler
+from repro.kvcache.paged import OutOfBlocks, PagedKVPool
+from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                    estimator_cycle_cost)
+from repro.serving.request import Phase, Request, SLO
+from repro.serving.workload import generate_interactions
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    return cfg, init_params_cached(cfg)
+
+
+_params_cache = {}
+
+
+def init_params_cached(cfg):
+    if "p" not in _params_cache:
+        from repro.models import init_params
+        _params_cache["p"] = init_params(cfg, jax.random.PRNGKey(0),
+                                         jnp.float32)
+    return _params_cache["p"]
+
+
+def mk_server(cfg, params, share=False, page_size=16, **kw):
+    return BulletServer(cfg, params, config=ServerConfig(
+        slo=SLO(3.0, 150.0), max_slots=kw.pop("max_slots", 4),
+        max_len=kw.pop("max_len", 48),
+        cache=CacheConfig(paged=True, page_size=page_size,
+                          share_prefix=share), **kw))
+
+
+# ---------------------------------------------------------------------------
+# pool: matching, COW, refcounts
+# ---------------------------------------------------------------------------
+
+def test_register_then_match_full_pages():
+    p = PagedKVPool(64, block_size=4, share_prefix=True)
+    toks = np.arange(10, dtype=np.int32)
+    t = p.allocate(1, 10, prompt_tokens=toks)
+    assert t.shared_tokens == 0 and not t.cow_pairs
+    p.register_prefix(1, toks)
+    p.check_invariants()
+    # longer prompt with the same head: both full pages map shared
+    toks2 = np.concatenate([toks, [90, 91, 92, 93]]).astype(np.int32)
+    blocks, matched, cow = p.match_prefix(toks2)
+    assert matched == 8 and len(blocks) == 2 and cow is None
+    t2 = p.allocate(2, 14, prompt_tokens=toks2)
+    assert t2.shared_tokens == 8 and t2.shared_blocks == 2
+    assert t2.blocks[:2] == blocks
+    assert all(p._refs[b] == 2 for b in blocks)
+    p.check_invariants()
+
+
+def test_match_capped_below_full_prompt():
+    """An exact re-ask must still compute >= 1 token (the engine needs a
+    live query position to sample from), so a full match is capped."""
+    p = PagedKVPool(64, block_size=4, share_prefix=True)
+    a = np.arange(8, dtype=np.int32)
+    p.allocate(1, 8, prompt_tokens=a)
+    p.register_prefix(1, a)
+    _, matched, cow = p.match_prefix(a)
+    assert matched + (cow[1] if cow else 0) <= 7
+
+
+def test_cow_partial_tail():
+    p = PagedKVPool(64, block_size=4, share_prefix=True)
+    toks = np.arange(10, dtype=np.int32)
+    p.allocate(1, 10, prompt_tokens=toks)
+    p.register_prefix(1, toks)
+    div = np.array([0, 1, 2, 3, 4, 5, 99, 98, 7], dtype=np.int32)
+    blocks, matched, cow = p.match_prefix(div)
+    assert matched == 4 and cow is not None and cow[1] == 2
+    t = p.allocate(3, 9, prompt_tokens=div)
+    src, dst = t.cow_pairs[0]
+    assert src == cow[0] and dst in t.blocks and src not in t.blocks
+    assert t.shared_tokens == 6            # 4 full-page + 2 COW-tail
+    # the COW source keeps its single owner's ref; dst is exclusively ours
+    assert p._refs[src] == 1 and p._refs[dst] == 1
+    p.check_invariants()
+
+
+def test_free_keeps_shared_pages_cached_then_flush():
+    p = PagedKVPool(64, block_size=4, share_prefix=True)
+    toks = np.arange(8, dtype=np.int32)
+    p.allocate(1, 8, prompt_tokens=toks)
+    p.register_prefix(1, toks)
+    p.allocate(2, 12, prompt_tokens=np.concatenate(
+        [toks, [50, 51, 52, 53]]).astype(np.int32))
+    with pytest.raises(RuntimeError):
+        p.flush_shared()                   # pages have 2 live readers
+    p.free(1)
+    p.check_invariants()
+    assert p.cached_blocks == 0            # rid 2 still reads the pages
+    p.free(2)
+    p.check_invariants()
+    assert p.cached_blocks == 2            # ref-0 but still indexed
+    assert p.available_blocks == p.n_blocks
+    assert p.flush_shared() == 2
+    p.check_invariants()
+    assert p.free_blocks == p.n_blocks
+
+
+def test_preempt_never_tears_shared_pages():
+    p = PagedKVPool(64, block_size=4, share_prefix=True)
+    toks = np.arange(8, dtype=np.int32)
+    p.allocate(1, 8, prompt_tokens=toks)
+    p.register_prefix(1, toks)
+    t2 = p.allocate(2, 12, prompt_tokens=np.concatenate(
+        [toks, [50, 51, 52, 53]]).astype(np.int32))
+    shared = list(t2.blocks[:2])
+    assert p.reclaimable_blocks(2) == 1    # only its exclusive page
+    p.preempt(2)
+    p.check_invariants()
+    # rid 1 still owns its pages; nothing it reads was reclaimed
+    assert all(p._refs[b] == 1 for b in shared)
+    assert p.table(1).blocks[:2] == shared
+
+
+def test_cached_pages_reclaimed_lru_under_pressure():
+    p = PagedKVPool(4 * 4, block_size=4, share_prefix=True)   # 4 blocks
+    a = np.arange(8, dtype=np.int32)
+    p.allocate(1, 8, prompt_tokens=a)
+    p.register_prefix(1, a)
+    p.free(1)
+    assert p.cached_blocks == 2 and p.free_blocks == 2
+    # demand exceeds the free list: cached pages are evicted, oldest first
+    p.allocate(2, 13)
+    p.check_invariants()
+    assert p.ops.evictions >= 1
+    with pytest.raises(OutOfBlocks):
+        p.allocate(3, 8)
+
+
+def test_pool_property_random_ops():
+    """Seeded random allocate/register/extend/free/preempt storm; the
+    partition + refcount invariants must hold after every operation."""
+    rng = np.random.default_rng(7)
+    p = PagedKVPool(32 * 4, block_size=4, share_prefix=True)
+    live = {}
+    rid = 0
+    for _ in range(400):
+        op = rng.integers(0, 4)
+        if op == 0:
+            n = int(rng.integers(1, 20))
+            toks = rng.integers(0, 3, n).astype(np.int32)  # tiny vocab:
+            rid += 1                                       # collisions
+            try:
+                p.allocate(rid, n, prompt_tokens=toks)
+                live[rid] = toks
+            except OutOfBlocks:
+                pass
+        elif op == 1 and live:
+            r = int(rng.choice(list(live)))
+            p.register_prefix(r, live[r])
+        elif op == 2 and live:
+            r = int(rng.choice(list(live)))
+            try:
+                p.extend(r, int(rng.integers(1, 4)))
+            except OutOfBlocks:
+                pass
+        elif op == 3 and live:
+            r = int(rng.choice(list(live)))
+            (p.free if rng.integers(0, 2) else p.preempt)(r)
+            del live[r]
+        p.check_invariants()
+    for r in list(live):
+        p.free(r)
+    p.check_invariants()
+    assert p.available_blocks == p.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# engine: byte identity + reduction, gating
+# ---------------------------------------------------------------------------
+
+def _run_multiturn(cfg, params, share):
+    srv = mk_server(cfg, params, share=share)
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab_size, 20, dtype=np.int32)
+    outs = {}
+
+    def drain():
+        now = 0.0
+        while not srv.idle:
+            srv.step(now)
+            srv.pool.check_invariants()
+            now += 1e-3
+        outs.update(srv.outputs)
+
+    srv.submit(Request(rid=0, arrival=0.0, prompt_len=20, output_len=6),
+               base)
+    drain()
+    # turn 2: history + actual outputs + fresh tokens (>= 50% overlap)
+    p1 = np.concatenate([base, np.asarray(outs[0], np.int32),
+                         rng.integers(0, cfg.vocab_size, 5, np.int32)
+                         ]).astype(np.int32)
+    srv.submit(Request(rid=1, arrival=0.0, prompt_len=len(p1),
+                       output_len=6), p1)
+    drain()
+    # turn 3: diverge mid-page -> exercises copy-on-write
+    p2 = p1.copy()
+    p2[-3] = (int(p2[-3]) + 7) % cfg.vocab_size
+    srv.submit(Request(rid=2, arrival=0.0, prompt_len=len(p2),
+                       output_len=5), p2)
+    drain()
+    assert srv.pool.available_blocks == srv.pool.n_blocks
+    return outs, srv
+
+
+def test_multiturn_byte_identity_and_prefill_reduction(setup):
+    """Acceptance: sharing is invisible in the token streams and >= 2x
+    cheaper in prefilled tokens on a >= 50%-overlap multi-turn replay."""
+    cfg, params = setup
+    out_off, s_off = _run_multiturn(cfg, params, share=False)
+    out_on, s_on = _run_multiturn(cfg, params, share=True)
+    assert out_on == out_off
+    assert s_off.stats.reused_prefill_tokens == 0
+    assert s_on.stats.prefix_hits == 2
+    assert s_on.stats.reused_prefill_tokens > 0
+    assert s_on.pool.ops.cow_copies >= 1
+    assert s_off.stats.prefill_tokens >= 2 * s_on.stats.prefill_tokens
+    # estimator charging: a reused-cycle observation is strictly cheaper
+    # than prefilling the same span from scratch
+    est = PerfEstimator()
+    full = CycleObservation("serial", 40, 8, 8, 0, 1)
+    reused = CycleObservation("serial", 15, 8, 8, 0, 1, reused_tokens=25)
+    from repro.core.estimator import predict_cycle
+    assert predict_cycle(est, cfg, reused) < predict_cycle(est, cfg, full)
+
+
+def test_share_prefix_requires_paged_tile(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        BulletServer(cfg, params, config=ServerConfig(
+            slo=SLO(3.0, 150.0),
+            cache=CacheConfig(paged=False, share_prefix=True)))
+    with pytest.raises(ValueError):
+        BulletServer(cfg, params, config=ServerConfig(
+            slo=SLO(3.0, 150.0),
+            cache=CacheConfig(paged=True, share_prefix=True),
+            execution=ExecConfig(partition="chip")))
+
+
+def test_frontend_interactions_share_on_off(setup):
+    """Closed-loop multi-turn sessions through the OnlineFrontend: the
+    virtual-clock replay is deterministic, sharing changes no tokens, and
+    reuse actually fires across turns."""
+    cfg, params = setup
+    streams = {}
+    for share in (False, True):
+        # 4-token pages: these short turns fill whole pages, so turn 2
+        # actually finds indexed content to map
+        srv = mk_server(cfg, params, share=share, page_size=4)
+        fe = OnlineFrontend(
+            srv, VirtualClock(), cycle_cost=estimator_cycle_cost,
+            on_cycle=lambda s, now: s.pool.check_invariants())
+        sessions = generate_interactions(
+            2, rate_s=100.0, turns=2, new_tokens=10, output_tokens=4,
+            seed=3)
+        fe.submit_interactions(sessions, cfg.vocab_size, seed=3)
+        fe.run()
+        done = [r for r in fe.requests if r.phase == Phase.FINISHED]
+        assert len(done) >= 3               # follow-up turns were issued
+        streams[share] = {r.rid: list(srv.outputs[r.rid]) for r in done}
+        if share:
+            assert srv.stats.reused_prefill_tokens > 0
+    assert streams[True] == streams[False]
+
+
+# ---------------------------------------------------------------------------
+# ServerConfig surface + legacy shim
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_warn_but_work(setup):
+    cfg, params = setup
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        srv = BulletServer(cfg, params, slo=SLO(3.0, 150.0), max_slots=4,
+                           max_len=48, paged=True)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    new = mk_server(cfg, params)
+    assert (srv.max_len, srv.paged) == (new.max_len, new.paged)
+    assert srv.config.cache.paged is True
+
+
+def test_config_and_legacy_kwargs_are_exclusive(setup):
+    cfg, params = setup
+    with pytest.raises(TypeError):
+        BulletServer(cfg, params, config=ServerConfig(slo=SLO(3.0, 150.0)),
+                     max_slots=4)
+
+
+def test_unknown_legacy_kwarg_raises(setup):
+    cfg, params = setup
+    with pytest.raises(TypeError), warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        BulletServer(cfg, params, slo=SLO(3.0, 150.0), bogus=1)
+
+
+def test_missing_slo_raises(setup):
+    cfg, params = setup
+    with pytest.raises(TypeError):
+        BulletServer(cfg, params, config=ServerConfig())
+
+
+def test_scheduler_config_is_per_server(setup):
+    """The old `sched: SchedulerConfig = SchedulerConfig()` default was a
+    single shared mutable instance; every server must get its own."""
+    cfg, params = setup
+    a = mk_server(cfg, params)
+    b = mk_server(cfg, params)
+    assert a.scheduler.sc is not b.scheduler.sc
+    est = PerfEstimator()
+    s1 = SLOScheduler(cfg, est, SLO(3.0, 150.0))
+    s2 = SLOScheduler(cfg, est, SLO(3.0, 150.0))
+    assert s1.sc is not s2.sc
+
+
+def test_server_config_round_trip():
+    c = ServerConfig.from_legacy(dict(
+        max_slots=2, max_len=32, paged=True, page_size=8,
+        share_prefix=True, partition="tile", refit=False,
+        refit_interval=64))
+    assert c.max_slots == 2 and c.cache.page_size == 8
+    assert c.cache.share_prefix and c.control.refit is False
+    assert c.control.refit_interval == 64
+    assert isinstance(c.control, ControlConfig)
+    with pytest.raises(TypeError):
+        ServerConfig.from_legacy(dict(nope=1))

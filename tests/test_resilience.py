@@ -204,6 +204,48 @@ def test_serial_dispatch_failures_degrade_paged_roundtrip(setup):
     assert dict(s1.outputs) == dict(s0.outputs)
 
 
+def test_paged_to_dense_rung_flushes_shared_prefix(setup):
+    """The paged→dense rung under live shared-prefix reuse
+    (docs/KV_SHARING.md): flushing while pages have multiple live
+    readers refuses; set_cache_mode unwinds every reader first, so its
+    flush succeeds, the radix index empties, and the requeued requests
+    finish on the dense reference."""
+    cfg, params = setup
+    server = mk_server(cfg, params, paged=True, share_prefix=True,
+                       fused=False, page_size=4)
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    server.submit(Request(rid=0, arrival=0.0, prompt_len=16,
+                          output_len=4), base)
+    now = 0.0
+    while not server.idle:
+        server.step(now)
+        now += 1e-3
+    hist = np.concatenate([base, np.asarray(server.outputs[0], np.int32)])
+    readers = []
+    for rid in (1, 2):
+        p = np.concatenate([hist, rng.integers(0, cfg.vocab_size, 2 + rid,
+                                               np.int32)]).astype(np.int32)
+        r = Request(rid=rid, arrival=now, prompt_len=len(p), output_len=6)
+        server.submit(r, p)
+        readers.append(r)
+    while not all(r.phase == Phase.DECODE for r in readers):
+        server.step(now)
+        now += 1e-3
+    assert all(server.pool.table(r.rid).shared_tokens > 0 for r in readers)
+    with pytest.raises(RuntimeError):
+        server.pool.flush_shared()         # 2 live readers per page
+    server.set_cache_mode(False, now)      # unwinds readers, then flushes
+    assert not server.paged
+    assert server.pool.cached_blocks == 0
+    server.check_invariants()
+    server.run()
+    assert all(len(server.outputs[r.rid]) == r.output_len for r in readers)
+    server.set_cache_mode(True, now)       # probe-back: fresh empty index
+    server.check_invariants()
+    assert server.pool.available_blocks == server.pool.n_blocks
+
+
 # ---------------------------------------------------------------------------
 # deadlines and cancellation (incl. the mid-prefill leak regression)
 # ---------------------------------------------------------------------------
