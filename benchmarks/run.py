@@ -27,6 +27,7 @@ BENCHES = [
     ("obs_overhead", "benchmarks.obs_overhead"),
     ("prefix_reuse", "benchmarks.prefix_reuse"),
     ("chaos_replay", "benchmarks.chaos_replay"),
+    ("fairness_replay", "benchmarks.fairness_replay"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 

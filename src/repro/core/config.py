@@ -80,6 +80,10 @@ class ServerConfig:
     obs: Any = None                      # Observability seam
     faults: Any = None                   # FaultInjector seam
     guard: Any = None                    # SLOGuard seam
+    #: TenancyController seam (docs/MULTITENANCY.md): per-tenant rate
+    #: limits, OIT throttling, credit-biased admission + preemption;
+    #: None runs single-tenant, byte-identical to the pre-tenancy engine
+    tenancy: Any = None
 
     @classmethod
     def from_legacy(cls, kw: dict) -> "ServerConfig":
@@ -121,13 +125,13 @@ LEGACY_KEYS = frozenset(
 
 
 def build_server_config(args, *, slo=None, est=None, obs=None,
-                        faults=None, guard=None,
+                        faults=None, guard=None, tenancy=None,
                         refit: Any = None) -> ServerConfig:
     """The one place launch/serve.py turns CLI flags into a ServerConfig.
 
     ``args`` is the serve argparse namespace; objects the launcher
     constructs itself (SLO choice differs per mode, estimator, obs,
-    resilience seams) are passed explicitly."""
+    resilience seams, tenancy controller) are passed explicitly."""
     return ServerConfig(
         slo=slo, est=est,
         max_slots=args.slots, max_len=args.max_len,
@@ -135,4 +139,4 @@ def build_server_config(args, *, slo=None, est=None, obs=None,
                           share_prefix=args.share_prefix),
         execution=ExecConfig(partition=args.partition),
         control=ControlConfig(refit=refit),
-        obs=obs, faults=faults, guard=guard)
+        obs=obs, faults=faults, guard=guard, tenancy=tenancy)

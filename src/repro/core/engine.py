@@ -592,6 +592,17 @@ class BulletServer:
         self.guard = guard
         if guard is not None:
             guard.attach(self)
+        #: tenant layer (serving.tenancy.TenancyController,
+        #: docs/MULTITENANCY.md): the frontend gates admissions through
+        #: it, the scheduler's slack sort gains a credit-tier bias, and
+        #: preemption picks its victim within the lowest-credit tenant.
+        #: None (default) keeps every path byte-identical to the
+        #: single-tenant engine.
+        self.tenancy = config.tenancy
+        if self.tenancy is not None:
+            self.tenancy.attach(self)
+            if self.tenancy.credit_enabled:
+                self.scheduler.priority = self.tenancy.tier
 
     def _build_fused_executable(self, part) -> FusedExecutable:
         """ResourceManager builder: one fused-step launcher per quantized
@@ -717,6 +728,8 @@ class BulletServer:
         req.phase = Phase.QUEUED
         req._prompt = np.asarray(prompt_tokens, np.int32)   # type: ignore
         self.pending.append(req)
+        if self.tenancy is not None:
+            self.tenancy.track(req)
         if self.obs.enabled:
             self.obs.requests_submitted.inc()
             self.obs.spans.mark(req.rid, "submit", req.arrival,
@@ -804,11 +817,21 @@ class BulletServer:
     def _preempt_for(self, req: Request, now: float) -> bool:
         """KV pressure (§3.5.2): evict the lowest-priority decode slot —
         the strictly younger request with the latest arrival — freeing its
-        pool pages and requeueing it with its generated prefix."""
+        pool pages and requeueing it with its generated prefix. With a
+        credit-scoring tenancy layer attached, the victim is the youngest
+        request *within the lowest-credit tenant* among the candidates
+        (docs/MULTITENANCY.md): a misbehaving tenant loses its own decode
+        progress before anyone else's."""
         victims = self._preempt_candidates(req)
         if not victims:
             return False
-        victim = max(victims, key=lambda r: r.arrival)
+        if self.tenancy is not None and self.tenancy.credit_enabled:
+            lo = min(self.tenancy.credit_of(v) for v in victims)
+            pool = [v for v in victims
+                    if self.tenancy.credit_of(v) <= lo + 1e-12]
+            victim = max(pool, key=lambda r: r.arrival)
+        else:
+            victim = max(victims, key=lambda r: r.arrival)
         slot = victim._slot                                 # type: ignore
         self.pool.preempt(victim.rid)
         if self.paged:
@@ -1221,6 +1244,10 @@ class BulletServer:
         r.phase = Phase.FINISHED
         r.finish_time = now
         self.finished.append(r)
+        if self.tenancy is not None:
+            # recompute the tenant's credit from this outcome (SLO
+            # violation + TTFT tail EWMAs, docs/MULTITENANCY.md)
+            self.tenancy.on_finish(r, self.slo)
         if self.obs.enabled:
             self.obs.requests_finished.inc()
             self.obs.spans.mark(r.rid, "finish", now,
@@ -1281,6 +1308,8 @@ class BulletServer:
         r.cancel_reason = why
         r.finish_time = now
         self.stats.cancelled += 1
+        if self.tenancy is not None:
+            self.tenancy.on_cancel(r, why)
         if self.obs.enabled:
             self.obs.requests_cancelled.labels(why=why).inc()
             self.obs.spans.mark(r.rid, "cancel", now, why=why)

@@ -113,6 +113,12 @@ class SLOScheduler:
         #: the most recent Decision returned by schedule() — the engine's
         #: cycle trace reads its ``reason`` as the scheduler rationale
         self.last_decision: Optional[Decision] = None
+        #: optional admission-priority hook ``rid -> tier`` (higher tier
+        #: admits earlier). The engine wires the tenancy layer's
+        #: credit-quantized tier here (docs/MULTITENANCY.md); the slack
+        #: sort stays the within-tier order, so None (default) keeps
+        #: reorder_pending's pure Algorithm 1 behavior.
+        self.priority = None
 
     # -- progress tracking (Algorithm 1 lines 2-10) -------------------
     def estimate_ttfts(self, state: SystemState, now: float,
@@ -457,9 +463,14 @@ class SLOScheduler:
         pause-counter side effects)."""
         if ttfts is None:
             ttfts = self.estimate_ttfts(state, now, pending)
-        return sorted(
+        order = sorted(
             (rid for rid, _, _ in pending),
             key=lambda rid: self.slo.norm_ttft_ms - ttfts.get(rid, 0.0))
+        if self.priority is not None:
+            # stable: high-credit tenants admit first, slack order within
+            # a tier is untouched
+            order.sort(key=lambda rid: -self.priority(rid))
+        return order
 
     # -- main entry (Algorithm 1) --------------------------------------
     def schedule(self, state: SystemState, now: float,

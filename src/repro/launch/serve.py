@@ -122,9 +122,16 @@ def _replay(args):
 
     est = PerfEstimator(HardwareSpec(n_chips=args.chips))
     res = _resilience_kwargs(args)
+    tenancy = None
+    if args.tenants > 0:
+        from repro.serving.tenancy import (TenancyConfig, TenancyController,
+                                           make_apps)
+        tenancy = TenancyController(
+            make_apps(args.tenants, rate_limit=args.rate_limit),
+            TenancyConfig(credit=args.credit))
     server = BulletServer(cfg, params, config=build_server_config(
         args, slo=slo, est=est, refit=not args.no_refit,
-        obs=Observability(),
+        obs=Observability(), tenancy=tenancy,
         faults=res.get("faults"), guard=res.get("guard")))
     trace = fit_trace_to_context(
         generate_trace(args.dataset, args.rate, args.duration,
@@ -143,14 +150,35 @@ def _replay(args):
     if args.stream:
         fe.on_token = lambda r, tok, t: print(
             f"  [{t:8.3f}s] rid={r.rid} tok#{r.generated}={tok}")
-    fe.submit_trace(trace, cfg.vocab_size, seed=args.seed)
+    if tenancy is not None:
+        # multi-tenant replay: a Zipf-skewed closed-loop interaction
+        # trace instead of the flat open-loop one (docs/MULTITENANCY.md)
+        from repro.serving.tenancy import generate_tenant_interactions
+        sessions = generate_tenant_interactions(
+            list(tenancy.apps.values()),
+            n_sessions=max(args.requests, 1), rate_s=args.rate,
+            seed=args.seed)
+        fe.submit_interactions(sessions, cfg.vocab_size, seed=args.seed)
+        n_submitted = len(sessions)
+        kind = "sessions"
+    else:
+        fe.submit_trace(trace, cfg.vocab_size, seed=args.seed)
+        n_submitted = len(trace)
+        kind = "requests"
     m = fe.run()
     if fe.truncated:
         print("WARNING: replay hit max_cycles with unfinished requests; "
               "metrics cover the completed subset only")
     print(run_report(server, metrics=m, header=(
         f"replay({args.clock}) {args.dataset} rate={args.rate}/s "
-        f"dur={args.duration}s -> {len(trace)} requests")))
+        f"dur={args.duration}s -> {n_submitted} {kind}")))
+    if tenancy is not None:
+        tenancy.check_oit()
+        for app_id, st in sorted(tenancy.stats.items()):
+            print(f"  tenant {tenancy._label(app_id):8s} "
+                  f"credit={tenancy.credit(app_id):.2f} "
+                  f"admitted={st.admitted} throttled={st.throttled} "
+                  f"finished={st.finished} goodput={st.goodput}")
     _write_obs_outputs(args, server)
 
 
@@ -241,6 +269,19 @@ def main():
                     help="inject a seeded deterministic fault plan: a "
                          "JSON file path or inline JSON object "
                          "(schema in docs/RESILIENCE.md)")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="multi-tenant replay: N apps with Zipf-skewed "
+                         "traffic over a 50k-user id space, gated by the "
+                         "tenant admission layer "
+                         "(docs/MULTITENANCY.md; replay mode)")
+    ap.add_argument("--credit", action="store_true",
+                    help="credit-biased admission order and preemption-"
+                         "victim choice (per-tenant SLO-violation / "
+                         "tail-latency history; needs --tenants)")
+    ap.add_argument("--rate-limit", type=int, default=0, metavar="N",
+                    help="per-tenant sliding-window budget of new "
+                         "interactions per second (0 = unlimited); "
+                         "mid-conversation turns are never throttled")
     ap.add_argument("--no-refit", action="store_true",
                     help="pin the estimator's offline params (disable the "
                          "online refit loop; see docs/TUNING.md)")
@@ -249,6 +290,12 @@ def main():
                          "surrogate timings instead of the engine's own "
                          "estimate (demonstrates the refit loop)")
     args = ap.parse_args()
+    if args.credit and args.tenants <= 0:
+        ap.error("--credit biases the tenant admission layer; "
+                 "needs --tenants N")
+    if args.tenants > 0 and args.mode != "replay":
+        ap.error("--tenants drives the multi-tenant interaction replay; "
+                 "use --mode replay")
     if args.oracle and args.clock != "virtual":
         ap.error("--oracle replays on surrogate-truth timings, which only "
                  "the virtual clock can advance on; use --clock virtual")

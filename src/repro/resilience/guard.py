@@ -27,7 +27,7 @@ An :class:`SLOGuard` is consulted by ``BulletServer.step`` every cycle:
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 from repro.launch.submesh import HandoffPolicy
@@ -70,7 +70,7 @@ class GuardConfig:
     #: quiet cycles before probing one rung back toward the fast path
     cooldown_cycles: int = 48
     #: transient-handoff retry policy installed into the engine
-    handoff: HandoffPolicy = HandoffPolicy()
+    handoff: HandoffPolicy = field(default_factory=HandoffPolicy)
 
 
 class SLOGuard:

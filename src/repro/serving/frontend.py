@@ -133,6 +133,10 @@ class OnlineFrontend:
         #: rids shed by admission backpressure / still in flight when the
         #: cycle budget ran out (filled by run())
         self.shed: List[int] = []
+        #: subset of ``shed`` rejected by the tenant gate (rate limit /
+        #: KV pressure — always opening turns, never mid-interaction;
+        #: docs/MULTITENANCY.md)
+        self.throttled: List[int] = []
         self.timed_out: List[int] = []
         self._queue: List[Tuple[Request, np.ndarray]] = []
         #: backpressured submits awaiting retry: (release_at, tries, ...)
@@ -180,10 +184,14 @@ class OnlineFrontend:
             rng = np.random.default_rng((seed, sess.session_id))
             self._launch_turn(sess.session_id, rng, tuple(sess.turns),
                               np.zeros(0, np.int32), sess.arrival,
-                              vocab_size, rid_counter)
+                              vocab_size, rid_counter,
+                              ident=(getattr(sess, "user_id", None),
+                                     getattr(sess, "app_id", None)),
+                              turn_index=0)
 
     def _launch_turn(self, sid: int, rng, turns, history: np.ndarray,
-                     arrival: float, vocab_size: int, rid_counter) -> None:
+                     arrival: float, vocab_size: int, rid_counter,
+                     ident=(None, None), turn_index: int = 0) -> None:
         max_len = self.server.max_len
         turn, rest = turns[0], turns[1:]
         fresh = rng.integers(0, vocab_size, turn.new_tokens, dtype=np.int32)
@@ -192,7 +200,9 @@ class OnlineFrontend:
             return                      # history outgrew the context window
         out_len = max(1, min(turn.output_tokens, max_len - len(toks)))
         req = Request(rid=next(rid_counter), arrival=arrival,
-                      prompt_len=len(toks), output_len=out_len)
+                      prompt_len=len(toks), output_len=out_len,
+                      user_id=ident[0], app_id=ident[1],
+                      session_id=sid, turn_index=turn_index)
         outputs: List[int] = []
 
         def on_tok(r: Request, token: int, now: float) -> None:
@@ -204,7 +214,8 @@ class OnlineFrontend:
                     [toks, np.asarray(outputs, np.int32)])
                 self._launch_turn(sid, rng, rest, nxt,
                                   now + rest[0].think_time_s,
-                                  vocab_size, rid_counter)
+                                  vocab_size, rid_counter,
+                                  ident=ident, turn_index=turn_index + 1)
 
         self.requests.append(req)
         # keep the release queue sorted past the release pointer; run()
@@ -242,6 +253,18 @@ class OnlineFrontend:
 
     def _try_submit(self, req: Request, toks: np.ndarray, tries: int,
                     now: float) -> None:
+        ten = self.server.tenancy
+        if ten is not None and ten.enabled:
+            verdict = ten.gate(req, now, tries)
+            if verdict == "throttle":
+                # the OIT rule guarantees this is an opening turn: the
+                # whole interaction dies before any KV was invested
+                self._shed(req, now, tries, reason="throttled")
+                return
+            if verdict == "defer":
+                self._deferred.append(
+                    (now + ten.cfg.defer_s, tries + 1, req, toks))
+                return
         guard = self.server.guard
         if guard is not None:
             try:
@@ -256,18 +279,22 @@ class OnlineFrontend:
         self.server.submit(req, toks)
         self.admitted_order.append(req.rid)
 
-    def _shed(self, req: Request, now: float, tries: int) -> None:
-        """Retryable-rejection budget exhausted: the request never enters
-        the engine — terminal CANCELLED with ``shed`` as the cause."""
+    def _shed(self, req: Request, now: float, tries: int,
+              reason: str = "shed") -> None:
+        """Retryable-rejection budget exhausted (or the tenant gate said
+        no): the request never enters the engine — terminal CANCELLED
+        with ``reason`` as the cause."""
         req.phase = Phase.CANCELLED
-        req.cancel_reason = "shed"
+        req.cancel_reason = reason
         req.finish_time = now
         self.server.stats.shed += 1
         self.shed.append(req.rid)
+        if reason == "throttled":
+            self.throttled.append(req.rid)
         obs = self.server.obs
         if obs.enabled:
             obs.requests_shed.inc()
-            obs.spans.mark(req.rid, "shed", now, retries=float(tries))
+            obs.spans.mark(req.rid, reason, now, retries=float(tries))
 
     def _next_release(self) -> Optional[float]:
         ts = [t for t, *_ in self._deferred]

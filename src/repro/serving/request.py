@@ -54,10 +54,22 @@ class Request:
     token_times: List[float] = field(default_factory=list)
 
     #: why the request was cancelled (``ttft_deadline`` / ``total_deadline``
-    #: / ``shed`` / ...). Set before the terminal phase flip for requests
-    #: cancelled mid-prefill: the engine defers their removal to the next
-    #: layer-group boundary, and this mark is the tombstone it honors.
+    #: / ``shed`` / ``throttled`` / ...). Set before the terminal phase flip
+    #: for requests cancelled mid-prefill: the engine defers their removal
+    #: to the next layer-group boundary, and this mark is the tombstone it
+    #: honors.
     cancel_reason: Optional[str] = None
+
+    # -- tenant identity (docs/MULTITENANCY.md) ------------------------
+    #: None on single-tenant traces; the tenancy layer maps None -> the
+    #: anonymous app 0
+    user_id: Optional[int] = None
+    app_id: Optional[int] = None
+    #: multi-turn session this request is a turn of (None = standalone)
+    session_id: Optional[int] = None
+    #: 0 = the interaction's opening turn (the only kind the tenant gate
+    #: may throttle — the OIT rule); > 0 = mid-conversation follow-up
+    turn_index: int = 0
 
     # -- metrics ------------------------------------------------------
     @property

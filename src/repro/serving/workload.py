@@ -13,7 +13,7 @@ the paper's Fig. 10 / the public datasets:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -112,6 +112,10 @@ class Interaction:
     session_id: int
     arrival: float          # arrival of the first turn
     turns: tuple            # Tuple[Turn, ...]
+    #: tenant identity (docs/MULTITENANCY.md): None on single-tenant
+    #: workloads; ``tenancy.generate_tenant_interactions`` fills both
+    user_id: Optional[int] = None
+    app_id: Optional[int] = None
 
 
 def generate_interactions(n_sessions: int, rate_s: float, *,

@@ -1,0 +1,92 @@
+"""AST lint guards over ``src/repro``.
+
+The shared-mutable-default bug class has bitten this codebase before
+(`SchedulerConfig()` as a dataclass default was one instance shared by
+every server — see ``test_scheduler_config_is_per_server``). These
+walkers keep it extinct:
+
+- no function parameter may default to a mutable literal
+  (list/dict/set/comprehension);
+- no dataclass field may default to a bare ``SomeClass()`` call —
+  ``field(default_factory=...)`` is the only sanctioned spelling, so
+  every instance gets its own default object.
+"""
+
+import ast
+import pathlib
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set,
+                    ast.ListComp, ast.DictComp, ast.SetComp)
+
+
+def _sources():
+    files = sorted(SRC.rglob("*.py"))
+    assert files, f"no sources under {SRC}"
+    return files
+
+
+def _call_name(call: ast.Call) -> str:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return getattr(fn, "id", "")
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = (target.attr if isinstance(target, ast.Attribute)
+                else getattr(target, "id", ""))
+        if name == "dataclass":
+            return True
+    return False
+
+
+def test_no_mutable_literal_function_defaults():
+    bad = []
+    for path in _sources():
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            defaults = list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                if isinstance(d, MUTABLE_LITERALS):
+                    bad.append(f"{path.relative_to(SRC)}:{d.lineno} "
+                               f"{node.name}()")
+    assert not bad, ("mutable literal used as a function default "
+                     f"(shared across calls): {bad}")
+
+
+def test_dataclass_defaults_use_field_factory():
+    bad = []
+    for path in _sources():
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.ClassDef) and _is_dataclass(node)):
+                continue
+            for stmt in node.body:
+                if not (isinstance(stmt, ast.AnnAssign)
+                        and stmt.value is not None):
+                    continue
+                v = stmt.value
+                if isinstance(v, MUTABLE_LITERALS):
+                    bad.append(f"{path.relative_to(SRC)}:{stmt.lineno} "
+                               f"{node.name}")
+                elif isinstance(v, ast.Call) and _call_name(v) != "field":
+                    bad.append(f"{path.relative_to(SRC)}:{stmt.lineno} "
+                               f"{node.name} = {_call_name(v)}()")
+    assert not bad, ("dataclass default built by a call at class-body "
+                     "time is one shared instance; use "
+                     f"field(default_factory=...): {bad}")
+
+
+def test_guard_config_handoff_is_per_instance():
+    """The concrete instance the audit caught: every GuardConfig must own
+    its HandoffPolicy."""
+    from repro.resilience.guard import GuardConfig
+    a, b = GuardConfig(), GuardConfig()
+    assert a.handoff is not b.handoff

@@ -14,6 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+import hypothesis.strategies as st
+from hypothesis import settings
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
 
 from repro.configs import get_config
 from repro.core.config import (CacheConfig, ControlConfig, ExecConfig,
@@ -155,42 +159,143 @@ def test_cached_pages_reclaimed_lru_under_pressure():
         p.allocate(3, 8)
 
 
-def test_pool_property_random_ops():
-    """Seeded random allocate/register/extend/free/preempt storm; the
-    partition + refcount invariants must hold after every operation."""
+class PoolOps:
+    """Rule bodies for the stateful pool test, hypothesis-free: the
+    RuleBasedStateMachine below wraps them, and the seeded fallback
+    driver calls them directly so the op storm still runs under the
+    conftest hypothesis shim."""
+
+    def reset(self):
+        self.pool = PagedKVPool(32 * 4, block_size=4, share_prefix=True)
+        self.live = {}
+        self.next_rid = 0
+
+    def _pick(self, j):
+        return sorted(self.live)[j % len(self.live)]
+
+    def do_allocate(self, n, seed):
+        # tiny vocab: prompt heads collide, so the radix index actually
+        # shares pages between unrelated rids
+        toks = np.random.default_rng(seed).integers(0, 3, n).astype(np.int32)
+        self.next_rid += 1
+        try:
+            self.pool.allocate(self.next_rid, n, prompt_tokens=toks)
+            self.live[self.next_rid] = toks
+        except OutOfBlocks:
+            pass
+
+    def do_register(self, j):
+        rid = self._pick(j)
+        self.pool.register_prefix(rid, self.live[rid])
+
+    def do_extend(self, j, k):
+        try:
+            self.pool.extend(self._pick(j), k)
+        except OutOfBlocks:
+            pass
+
+    def do_release(self, j, preempt):
+        rid = self._pick(j)
+        del self.live[rid]
+        (self.pool.preempt if preempt else self.pool.free)(rid)
+
+    def do_match(self, n, seed):
+        toks = np.random.default_rng(seed).integers(0, 3, n).astype(np.int32)
+        _, matched, cow = self.pool.match_prefix(toks)
+        # a full-prompt match is always capped: the engine needs >= 1
+        # live query position to sample from
+        assert matched + (cow[1] if cow else 0) <= max(n - 1, 0)
+
+    def do_flush(self):
+        try:
+            self.pool.flush_shared()
+        except RuntimeError:
+            pass                         # pages still have live readers
+
+    def check(self):
+        self.pool.check_invariants()
+
+    def drain(self):
+        for rid in list(self.live):
+            self.pool.free(rid)
+        self.live.clear()
+        self.check()
+        assert self.pool.available_blocks == self.pool.n_blocks
+
+
+class PagedPoolMachine(RuleBasedStateMachine, PoolOps):
+    """Property-based op storm over ``PagedKVPool``: hypothesis explores
+    allocate/extend/free/preempt/register/match/flush interleavings and
+    the referenced ∪ cached ∪ free partition (plus refcounts) must hold
+    after every step (``check_invariants``)."""
+
+    def __init__(self):
+        RuleBasedStateMachine.__init__(self)
+        self.reset()
+
+    @rule(n=st.integers(min_value=1, max_value=24),
+          seed=st.integers(min_value=0, max_value=9999))
+    def allocate(self, n, seed):
+        self.do_allocate(n, seed)
+
+    @precondition(lambda self: self.live)
+    @rule(j=st.integers(min_value=0, max_value=63))
+    def register(self, j):
+        self.do_register(j)
+
+    @precondition(lambda self: self.live)
+    @rule(j=st.integers(min_value=0, max_value=63),
+          k=st.integers(min_value=1, max_value=4))
+    def extend(self, j, k):
+        self.do_extend(j, k)
+
+    @precondition(lambda self: self.live)
+    @rule(j=st.integers(min_value=0, max_value=63), preempt=st.booleans())
+    def release(self, j, preempt):
+        self.do_release(j, preempt)
+
+    @rule(n=st.integers(min_value=1, max_value=16),
+          seed=st.integers(min_value=0, max_value=9999))
+    def match(self, n, seed):
+        self.do_match(n, seed)
+
+    @rule()
+    def flush(self):
+        self.do_flush()
+
+    @invariant()
+    def partition_holds(self):
+        self.check()
+
+
+TestPagedPoolMachine = PagedPoolMachine.TestCase
+TestPagedPoolMachine.settings = settings(
+    max_examples=25, stateful_step_count=60, deadline=None)
+
+
+def test_pool_ops_seeded_storm():
+    """400-op seeded storm through the same rule bodies — keeps the op
+    coverage when hypothesis is absent (the machine above then skips)."""
     rng = np.random.default_rng(7)
-    p = PagedKVPool(32 * 4, block_size=4, share_prefix=True)
-    live = {}
-    rid = 0
+    m = PoolOps()
+    m.reset()
     for _ in range(400):
-        op = rng.integers(0, 4)
+        op = int(rng.integers(0, 6))
         if op == 0:
-            n = int(rng.integers(1, 20))
-            toks = rng.integers(0, 3, n).astype(np.int32)  # tiny vocab:
-            rid += 1                                       # collisions
-            try:
-                p.allocate(rid, n, prompt_tokens=toks)
-                live[rid] = toks
-            except OutOfBlocks:
-                pass
-        elif op == 1 and live:
-            r = int(rng.choice(list(live)))
-            p.register_prefix(r, live[r])
-        elif op == 2 and live:
-            r = int(rng.choice(list(live)))
-            try:
-                p.extend(r, int(rng.integers(1, 4)))
-            except OutOfBlocks:
-                pass
-        elif op == 3 and live:
-            r = int(rng.choice(list(live)))
-            (p.free if rng.integers(0, 2) else p.preempt)(r)
-            del live[r]
-        p.check_invariants()
-    for r in list(live):
-        p.free(r)
-    p.check_invariants()
-    assert p.available_blocks == p.n_blocks
+            m.do_allocate(int(rng.integers(1, 24)),
+                          int(rng.integers(0, 9999)))
+        elif op == 1 and m.live:
+            m.do_register(int(rng.integers(0, 64)))
+        elif op == 2 and m.live:
+            m.do_extend(int(rng.integers(0, 64)), int(rng.integers(1, 4)))
+        elif op == 3 and m.live:
+            m.do_release(int(rng.integers(0, 64)), bool(rng.integers(0, 2)))
+        elif op == 4:
+            m.do_match(int(rng.integers(1, 16)), int(rng.integers(0, 9999)))
+        else:
+            m.do_flush()
+        m.check()
+    m.drain()
 
 
 # ---------------------------------------------------------------------------

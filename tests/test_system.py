@@ -1,14 +1,24 @@
 """End-to-end system behaviour: the full Bullet pipeline on a real model
-plus the multi-device sharded paths on a host mesh."""
+plus the multi-device sharded paths on a host mesh, and the cross-mode
+differential harness — the same multi-tenant interaction trace replayed
+through the serial, fused, and (multidevice) chip engines must produce
+byte-identical non-cancelled token streams."""
 
 import subprocess
 import sys
 import os
 
 import jax
+import jax.numpy as jnp
+import pytest
 
 from repro.configs import get_config, list_configs, ASSIGNED_ARCHS
 from repro.configs.base import INPUT_SHAPES
+from repro.core.config import CacheConfig, ExecConfig, ServerConfig
+from repro.core.engine import BulletServer
+from repro.serving.frontend import OnlineFrontend, VirtualClock
+from repro.serving.request import Phase, SLO
+from repro.serving.tenancy import generate_tenant_interactions, make_apps
 
 
 def test_all_assigned_archs_registered():
@@ -69,3 +79,63 @@ def test_dryrun_entrypoint_single_combo():
 def test_tests_see_single_device():
     # the 512-device override must NOT leak into the test process
     assert len(jax.devices()) == 1
+
+
+# ---------------------------------------------------------------------------
+# cross-mode differential harness: serial == fused == chip on one trace
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def diff_setup():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    sessions = generate_tenant_interactions(
+        make_apps(2), 5, rate_s=200.0, turns=2, new_tokens=8,
+        output_tokens=5, seed=11)
+    return cfg, params, sessions
+
+
+def _replay_mode(cfg, params, sessions, **exec_kw):
+    """Replay the trace on a fixed-step virtual clock in one execution
+    mode; returns the finished requests' token streams by rid."""
+    srv = BulletServer(cfg, params, config=ServerConfig(
+        slo=SLO(3.0, 150.0), max_slots=4, max_len=64,
+        cache=CacheConfig(paged=True, page_size=4),
+        execution=ExecConfig(**exec_kw)))
+    fe = OnlineFrontend(srv, VirtualClock(),
+                        on_cycle=lambda s, now: s.pool.check_invariants())
+    fe.submit_interactions(sessions, cfg.vocab_size, seed=11)
+    fe.run()
+    assert not fe.truncated
+    done = [r for r in fe.requests if r.phase == Phase.FINISHED]
+    assert len(done) == len(fe.requests)     # nothing cancelled this trace
+    return {r.rid: list(srv.outputs[r.rid]) for r in done}
+
+
+@pytest.fixture(scope="module")
+def serial_golden(diff_setup):
+    """Module-cached golden streams from the serial engine; every other
+    mode diffs against these."""
+    cfg, params, sessions = diff_setup
+    golden = _replay_mode(cfg, params, sessions, fused=False)
+    assert golden and all(golden.values())
+    return golden
+
+
+def test_differential_fused_matches_serial(diff_setup, serial_golden):
+    """Spatial sharing must be invisible in the token streams: the fused
+    engine replays the identical multi-tenant trace byte-for-byte."""
+    cfg, params, sessions = diff_setup
+    assert _replay_mode(cfg, params, sessions, fused=True) == serial_golden
+
+
+@pytest.mark.multidevice
+def test_differential_chip_matches_serial(diff_setup, serial_golden,
+                                          chip_devices):
+    """Chip-granular execution (cross-mesh KV handoff) replays the same
+    trace byte-for-byte against the serial golden."""
+    cfg, params, sessions = diff_setup
+    streams = _replay_mode(cfg, params, sessions, partition="chip",
+                           devices=tuple(chip_devices[:2]))
+    assert streams == serial_golden

@@ -1,0 +1,352 @@
+"""Multi-tenant admission layer (docs/MULTITENANCY.md).
+
+Unit half: the sliding-window rate limiter, the OIT rule (only opening
+turns may be throttled or deferred — a mid-conversation turn always
+admits), KV-pressure deferral, the credit EWMA / tier quantization, the
+Zipf-skewed tenant trace generator, and Jain's index. Replay half: the
+same flood-plus-nice multi-tenant trace runs tenancy-off, with a
+permissive controller (must be byte-identical — the seam is invisible
+when it does nothing), and with the full stack (must throttle only
+opening turns and improve fairness); plus the credit-biased
+preemption-victim choice in ``BulletServer._preempt_for``.
+"""
+
+from dataclasses import replace
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import CacheConfig, ServerConfig
+from repro.core.engine import BulletServer
+from repro.kvcache.paged import PagedKVPool
+from repro.serving.frontend import OnlineFrontend, VirtualClock
+from repro.serving.request import (Phase, Request, SLO, WORKLOAD_SLOS)
+from repro.serving.tenancy import (ADMIT, DEFER, THROTTLE, App,
+                                   TenancyConfig, TenancyController,
+                                   _CreditState, generate_tenant_interactions,
+                                   jain_index, make_apps,
+                                   per_tenant_outcomes, zipf_shares)
+
+SLO_TEST = SLO(norm_ttft_ms=3.0, tpot_ms=150.0)
+
+
+def _req(rid, turn_index=0, app_id=0, arrival=0.0, **kw):
+    return Request(rid=rid, arrival=arrival, prompt_len=8, output_len=4,
+                   app_id=app_id, turn_index=turn_index, **kw)
+
+
+def _finished(rid, app_id, *, slow=False):
+    """A finished request that meets (or blows) both SLOs."""
+    r = _req(rid, app_id=app_id)
+    r.phase = Phase.FINISHED
+    r.first_token_time = 1.0 if slow else 0.001   # norm TTFT 125 vs 0.125ms
+    r.finish_time = r.first_token_time + 0.001
+    r.generated = 4
+    return r
+
+
+# ---------------------------------------------------------------------------
+# gate: rate limit window + the OIT rule
+# ---------------------------------------------------------------------------
+
+def test_rate_limit_sliding_window():
+    ten = TenancyController(
+        [App(0)], TenancyConfig(rate_limit=2, window_s=1.0))
+    assert ten.gate(_req(1), 0.0) == ADMIT
+    assert ten.gate(_req(2), 0.1) == ADMIT
+    assert ten.gate(_req(3), 0.2) == THROTTLE          # window full
+    # t=1.05: the 0.0 admission slid out of the 1 s window, 0.1 has not
+    assert ten.gate(_req(4), 1.05) == ADMIT
+    assert ten.gate(_req(5), 1.06) == THROTTLE
+    st = ten.stats[0]
+    assert (st.submitted, st.admitted, st.throttled) == (5, 3, 2)
+    assert all(why == "rate_limit" for *_, why in ten.throttle_log)
+
+
+def test_oit_mid_turn_always_admits():
+    """The OIT rule: a follow-up turn admits through a full window."""
+    ten = TenancyController([App(0)], TenancyConfig(rate_limit=1))
+    assert ten.gate(_req(1), 0.0) == ADMIT
+    assert ten.gate(_req(2), 0.1) == THROTTLE
+    assert ten.gate(_req(3, turn_index=1), 0.2) == ADMIT
+    assert ten.gate(_req(4, turn_index=2), 0.3) == ADMIT
+    assert [e[2] for e in ten.throttle_log] == [0]
+    ten.check_oit()                                    # clean log passes
+    ten.throttle_log.append((99, 0, 1, "rate_limit"))  # fabricated breach
+    with pytest.raises(AssertionError):
+        ten.check_oit()
+
+
+def test_per_app_rate_limit_overrides_default():
+    apps = [App(0, rate_limit=-1), App(1)]             # -1 = unlimited
+    ten = TenancyController(apps, TenancyConfig(rate_limit=1))
+    for i in range(5):                                 # app 0: no budget
+        assert ten.gate(_req(i, app_id=0), 0.0) == ADMIT
+    assert ten.gate(_req(10, app_id=1), 0.0) == ADMIT  # app 1: default 1
+    assert ten.gate(_req(11, app_id=1), 0.0) == THROTTLE
+
+
+def test_kv_pressure_defers_then_throttles_only_new_interactions():
+    pool = PagedKVPool(16, block_size=4)
+    pool.allocate(1, 16)                               # pool 100% occupied
+    ten = TenancyController([App(0)], TenancyConfig(max_defers=2))
+    ten.attach(SimpleNamespace(pool=pool))
+    assert ten.gate(_req(2), 0.0, tries=0) == DEFER
+    assert ten.gate(_req(2), 0.1, tries=1) == DEFER
+    assert ten.gate(_req(2), 0.2, tries=2) == THROTTLE
+    assert ten.throttle_log[-1][3] == "kv_pressure"
+    # a mid-conversation turn admits straight through the pressure
+    assert ten.gate(_req(3, turn_index=1), 0.3) == ADMIT
+    pool.free(1)                                       # pressure released
+    assert ten.gate(_req(4), 0.4) == ADMIT
+    ten.check_oit()
+
+
+# ---------------------------------------------------------------------------
+# credit: EWMA history -> score -> tier
+# ---------------------------------------------------------------------------
+
+def test_credit_ewma_and_recovery():
+    ten = TenancyController(cfg=TenancyConfig(ewma=0.5))
+    assert ten.credit(7) == 1.0                        # no history yet
+    ten.on_finish(_finished(1, 7), SLO_TEST)
+    assert ten.credit(7) == 1.0                        # clean outcome
+    ten.on_finish(_finished(2, 7, slow=True), SLO_TEST)
+    # viol_ewma = tail_ewma = 0.5 -> credit = 1 - 0.7*0.5 - 0.3*0.5
+    assert ten.credit(7) == pytest.approx(0.5)
+    ten.on_finish(_finished(3, 7), SLO_TEST)
+    assert ten.credit(7) == pytest.approx(0.75)        # history decays back
+    assert ten.credit(8) == 1.0                        # other tenants clean
+    st = ten.stats[7]
+    assert (st.finished, st.slo_met, st.violations) == (3, 2, 1)
+
+
+def test_tier_quantization_and_rid_resolution():
+    ten = TenancyController(cfg=TenancyConfig(tiers=4))
+    assert ten.tier(123) == 3                          # unknown rid: no bias
+    bad = _req(5, app_id=2)
+    ten.track(bad)
+    ten._credit[2] = _CreditState(viol_ewma=1.0, tail_ewma=1.0)
+    assert ten.credit(2) == pytest.approx(0.0, abs=1e-12)
+    assert ten.tier(5) == 0
+    ten._credit[2] = _CreditState(viol_ewma=0.5, tail_ewma=0.0)
+    assert ten.tier(5) == int(0.65 * 4)
+
+
+# ---------------------------------------------------------------------------
+# workload generation + fairness metrics
+# ---------------------------------------------------------------------------
+
+def test_zipf_shares_and_make_apps():
+    s = zipf_shares(4)
+    assert s.sum() == pytest.approx(1.0)
+    assert all(s[i] > s[i + 1] for i in range(3))      # rank 0 heaviest
+    apps = make_apps(3, rate_limit=5)
+    assert [a.app_id for a in apps] == [0, 1, 2]
+    assert all(a.rate_limit == 5 for a in apps)
+    assert sum(a.user_share for a in apps) == pytest.approx(1.0)
+
+
+def test_generate_tenant_interactions_identity_and_partition():
+    apps = make_apps(3)
+    a = generate_tenant_interactions(apps, 60, rate_s=50.0, seed=9)
+    b = generate_tenant_interactions(apps, 60, rate_s=50.0, seed=9)
+    assert a == b                                      # deterministic
+    assert len(a) == 60
+    arr = [s.arrival for s in a]
+    assert arr == sorted(arr) and arr[0] > 0
+    assert {s.app_id for s in a} <= {0, 1, 2}
+    # users partition the 10^4-10^5 id space: no user serves two apps
+    by_app = {}
+    for s in a:
+        assert 0 <= s.user_id < 50_000
+        by_app.setdefault(s.app_id, set()).add(s.user_id)
+    apps_seen = list(by_app)
+    for i, x in enumerate(apps_seen):
+        for y in apps_seen[i + 1:]:
+            assert not (by_app[x] & by_app[y])
+    # Zipf skew: the rank-0 app dominates the session count
+    n0 = sum(s.app_id == 0 for s in a)
+    assert n0 > len(a) / len(apps)
+    # rate_skew reweights per-app arrival shares
+    skew = generate_tenant_interactions(apps, 60, rate_s=50.0, seed=9,
+                                        rate_skew={2: 50.0})
+    assert sum(s.app_id == 2 for s in skew) > n0
+
+
+def test_jain_index_edges():
+    assert jain_index([]) == 1.0
+    assert jain_index([0, 0, 0]) == 1.0
+    assert jain_index([5, 5, 5, 5]) == pytest.approx(1.0)
+    assert jain_index([1, 0, 0, 0]) == pytest.approx(0.25)
+    assert jain_index([2, 1]) == pytest.approx(0.9)
+
+
+def test_per_tenant_outcomes_groups_and_counts():
+    reqs = [_finished(1, 1), _finished(2, 1, slow=True)]
+    r3 = _req(3, app_id=2)
+    r3.phase, r3.cancel_reason = Phase.CANCELLED, "throttled"
+    r4 = _req(4, app_id=2)
+    r4.phase, r4.cancel_reason = Phase.CANCELLED, "shed"
+    r5 = Request(rid=5, arrival=0.0, prompt_len=4, output_len=2)  # app None
+    out = per_tenant_outcomes(reqs + [r3, r4, r5], SLO_TEST)
+    assert out[1].finished == 2 and out[1].goodput == 1
+    assert out[1].violations == 1
+    assert out[2].cancelled == 2 and out[2].throttled == 1
+    assert out[0].submitted == 1                       # anonymous -> app 0
+    assert out[2].goodput == 0
+
+
+# ---------------------------------------------------------------------------
+# engine replays (reduced model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    from repro.models import init_params
+    return cfg, init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _trace(apps):
+    """One flooding tenant + two nice ones, small enough for CI but
+    genuinely overloaded: the 16-token decodes hold the 2 slots long
+    enough that FIFO queueing blows the trailing TTFT budgets (the
+    miniature of benchmarks/fairness_replay.py's scenario)."""
+    flood = generate_tenant_interactions(
+        [apps[0]], 10, rate_s=2000.0, turns=2, new_tokens=6,
+        output_tokens=16, seed=5)
+    nice = generate_tenant_interactions(
+        apps[1:], 4, rate_s=100.0, zipf_a=0.0, turns=3, new_tokens=6,
+        output_tokens=16, seed=6)
+    return flood + [replace(s, session_id=s.session_id + 10) for s in nice]
+
+
+def _replay(cfg, params, sessions, tenancy):
+    srv = BulletServer(cfg, params, config=ServerConfig(
+        slo=WORKLOAD_SLOS["sharegpt"], max_slots=2, max_len=96,
+        cache=CacheConfig(paged=True, page_size=4), tenancy=tenancy))
+    fe = OnlineFrontend(srv, VirtualClock(),
+                        on_cycle=lambda s, now: s.pool.check_invariants())
+    fe.submit_interactions(sessions, cfg.vocab_size, seed=5)
+    m = fe.run()
+    assert not fe.truncated
+    streams = {r.rid: list(srv.outputs[r.rid]) for r in fe.requests
+               if r.phase == Phase.FINISHED}
+    return SimpleNamespace(fe=fe, srv=srv, m=m, streams=streams, ten=tenancy)
+
+
+@pytest.fixture(scope="module")
+def replays(setup):
+    cfg, params = setup
+    apps = make_apps(3)
+    sessions = _trace(apps)
+    off = _replay(cfg, params, sessions, None)
+    neutral = _replay(cfg, params, sessions, TenancyController(
+        make_apps(3), TenancyConfig(credit=False, rate_limit=0,
+                                    kv_pressure=1.01)))
+    full = _replay(cfg, params, sessions, TenancyController(
+        make_apps(3), TenancyConfig(credit=True, rate_limit=2)))
+    return SimpleNamespace(off=off, neutral=neutral, full=full, apps=apps)
+
+
+def test_tenancy_default_is_off():
+    assert ServerConfig().tenancy is None
+
+
+def test_permissive_controller_is_byte_identical(replays):
+    """Acceptance: with the gate never firing and credit off, the seam
+    changes no tokens, no ordering, and no aggregate metric vs
+    ``tenancy=None`` — the disabled-path regression for pre-PR runs."""
+    off, neutral = replays.off, replays.neutral
+    assert neutral.streams == off.streams
+    assert neutral.fe.admitted_order == off.fe.admitted_order
+    assert neutral.m == off.m
+    assert not neutral.fe.throttled and not neutral.ten.throttle_log
+    # the permissive controller still observed everything
+    assert sum(s.admitted for s in neutral.ten.stats.values()) \
+        == len(off.fe.admitted_order)
+
+
+def test_full_stack_throttles_only_opening_turns(replays):
+    full = replays.full
+    assert full.fe.throttled                           # the flood was cut
+    full.ten.check_oit()
+    assert all(turn == 0 for _, _, turn, _ in full.ten.throttle_log)
+    by_rid = {r.rid: r for r in full.fe.requests}
+    for rid in full.fe.throttled:
+        assert by_rid[rid].phase == Phase.CANCELLED
+        assert by_rid[rid].cancel_reason == "throttled"
+        assert by_rid[rid].turn_index == 0
+    # admitted sessions still ran their follow-up turns through the full
+    # window (the OIT rule end-to-end)
+    assert any(r.turn_index > 0 for r in full.fe.requests
+               if r.phase == Phase.FINISHED)
+
+
+def test_full_stack_improves_fairness(replays):
+    """Small-scale mirror of benchmarks/fairness_replay.py's gate."""
+    slo = WORKLOAD_SLOS["sharegpt"]
+    per = {name: per_tenant_outcomes(r.fe.requests, slo)
+           for name, r in (("off", replays.off), ("full", replays.full))}
+    jain = {name: jain_index([p[a.app_id].goodput if a.app_id in p else 0
+                              for a in replays.apps])
+            for name, p in per.items()}
+    assert jain["full"] > jain["off"]
+
+    def nice(p):
+        return sum(s.goodput for a, s in p.items() if a != 0)
+    assert nice(per["full"]) > nice(per["off"])
+    # shedding the flood's unservable tail may not cost aggregate goodput
+    assert replays.full.m.goodput >= replays.off.m.goodput
+
+
+def test_tenant_obs_counters(replays):
+    """Per-tenant counters surface in the obs registry when obs is on."""
+    ten = replays.full.ten
+    st = ten.stats
+    assert sum(s.throttled for s in st.values()) == len(
+        replays.full.fe.throttled)
+    assert ten.per_tenant_goodput() == {
+        a: s.goodput for a, s in sorted(st.items())}
+    # goodput definition: finished and met both SLOs, never cancelled
+    assert all(s.slo_met <= s.finished for s in st.values())
+
+
+# ---------------------------------------------------------------------------
+# credit-biased preemption-victim choice
+# ---------------------------------------------------------------------------
+
+def _mk_decode(srv, rid, arrival, app_id, slot):
+    r = _req(rid, app_id=app_id, arrival=arrival)
+    r.phase = Phase.DECODE
+    r._slot = slot
+    srv.pool.allocate(rid, 12)
+    srv.slot_req[slot] = r
+    srv.active = srv.active.at[slot].set(True)
+    return r
+
+
+@pytest.mark.parametrize("credit", [False, True])
+def test_preempt_victim_choice(setup, credit):
+    """FIFO evicts the globally youngest decode; with credit scoring the
+    youngest *within the lowest-credit tenant* goes first."""
+    cfg, params = setup
+    ten = TenancyController(make_apps(2), TenancyConfig(credit=credit))
+    srv = BulletServer(cfg, params, config=ServerConfig(
+        slo=WORKLOAD_SLOS["sharegpt"], max_slots=2, max_len=48,
+        cache=CacheConfig(paged=True, page_size=4), tenancy=ten))
+    r_abuser = _mk_decode(srv, 1, arrival=1.0, app_id=0, slot=0)
+    r_nice = _mk_decode(srv, 2, arrival=2.0, app_id=1, slot=1)
+    ten._credit[0] = _CreditState(viol_ewma=1.0, tail_ewma=1.0)
+    incoming = _req(9, arrival=0.5, app_id=1)
+    assert srv._preempt_for(incoming, now=3.0)
+    victim, survivor = ((r_abuser, r_nice) if credit
+                        else (r_nice, r_abuser))
+    assert victim.phase == Phase.QUEUED and victim in srv.pending
+    assert survivor.phase == Phase.DECODE
+    assert srv.stats.preempted == 1
+    srv.pool.check_invariants()

@@ -1,0 +1,91 @@
+"""Workload-generator determinism (the replay contract).
+
+Every trace generator — ``generate_trace``, ``generate_interactions``,
+and the multi-tenant ``generate_tenant_interactions`` — must be a pure
+function of its seed: two independently constructed RNG chains in this
+process produce equal traces, and a *fresh interpreter* (subprocess)
+reproduces the same content digest, so golden replays and the fairness
+benchmark are stable across machines and runs.
+"""
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+from repro.serving.tenancy import generate_tenant_interactions, make_apps
+from repro.serving.workload import (DATASETS, fit_trace_to_context,
+                                    generate_interactions, generate_trace)
+
+
+def trace_doc(seed=3):
+    return [(r.rid, r.arrival, r.prompt_len, r.output_len)
+            for r in generate_trace("sharegpt", 20.0, 2.0, seed=seed)]
+
+
+def interactions_doc(seed=4):
+    return [(s.session_id, s.arrival,
+             [(t.new_tokens, t.output_tokens, t.think_time_s)
+              for t in s.turns])
+            for s in generate_interactions(12, 30.0, seed=seed)]
+
+
+def tenant_doc(seed=5):
+    apps = make_apps(3)
+    return [(s.session_id, s.arrival, s.user_id, s.app_id,
+             [(t.new_tokens, t.output_tokens) for t in s.turns])
+            for s in generate_tenant_interactions(apps, 30, rate_s=40.0,
+                                                  seed=seed)]
+
+
+def combined_digest() -> str:
+    doc = [trace_doc(), interactions_doc(), tenant_doc()]
+    return hashlib.sha256(json.dumps(doc).encode()).hexdigest()
+
+
+def test_generate_trace_deterministic():
+    a = generate_trace("sharegpt", 20.0, 2.0, seed=3)
+    b = generate_trace("sharegpt", 20.0, 2.0, seed=3)
+    assert a == b
+    assert a != generate_trace("sharegpt", 20.0, 2.0, seed=4)
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr)
+    for ds in DATASETS:
+        t = generate_trace(ds, 50.0, 10.0, seed=1, max_requests=7)
+        assert len(t) == 7
+
+
+def test_generate_interactions_deterministic():
+    a = generate_interactions(12, 30.0, seed=4)
+    assert a == generate_interactions(12, 30.0, seed=4)
+    assert a != generate_interactions(12, 30.0, seed=5)
+    assert all(s.user_id is None and s.app_id is None for s in a)
+
+
+def test_tenant_generator_deterministic():
+    assert tenant_doc() == tenant_doc()
+    assert tenant_doc(seed=6) != tenant_doc(seed=5)
+
+
+def test_fit_trace_to_context_clamps():
+    t = fit_trace_to_context(generate_trace("arxiv-summary", 10.0, 2.0,
+                                            seed=0), max_len=64)
+    for r in t:
+        assert 4 <= r.prompt_len <= 32
+        assert 2 <= r.output_len <= 64 - r.prompt_len - 1
+
+
+def test_digest_stable_across_interpreters():
+    """A fresh interpreter rebuilds every RNG chain from scratch and must
+    land on the identical content digest (process-independent replay)."""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here])
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import test_workload as m; print(m.combined_digest())"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.strip() == combined_digest()
