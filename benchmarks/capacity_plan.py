@@ -1,0 +1,166 @@
+"""Fleet capacity planning: how many replicas does this traffic need?
+
+Two runs over the fleet simulator (docs/SIMULATOR.md):
+
+1. **Headline replay** — a >=100k-request multi-tenant closed-loop trace
+   (Zipf apps/users, multi-turn sessions with think time) replayed
+   through a 4-replica cluster behind the prefix-affinity router, timed
+   on the host CPU. The acceptance gate is wall-clock: the full trace
+   must finish in under five minutes, which is what makes the simulator
+   usable for provisioning sweeps at all.
+2. **Capacity search** — :func:`repro.sim.capacity_search` binary-searches
+   the minimum replica count whose p99 tails (normalized TTFT + TPOT)
+   hold the ShareGPT SLO on a fixed subsampled trace, and the evaluated
+   points double as the replicas-vs-attainment curve. The curve must be
+   monotone non-decreasing in N (more replicas never hurt the tail) —
+   a regression here means the router or the event loop leaks load
+   across fleet sizes.
+
+Fleet-scale simulator knobs (all pure speed/fidelity trades, see
+docs/SIMULATOR.md "Error regime"): ``layer_group=8`` coarsens prefill
+progress events, ``sched_every=4`` re-plans active batches every 4th
+cycle, ``refit_interval=512`` spaces refit attempts out, and
+``sched_pending_cap=64`` bounds the scheduler's O(pending) admission
+scan under overload.
+
+Artifact: ``BENCH_capacity.json`` (uploaded by the CI bench-smoke job).
+``REPRO_SMOKE=1`` shrinks the trace and fleet ceiling for the smoke step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+from benchmarks.common import HW, MODEL, fitted_estimator
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulate import SimConfig
+from repro.serving.request import WORKLOAD_SLOS
+from repro.serving.tenancy import generate_fleet_interactions
+from repro.sim import (ClusterConfig, ClusterSimulator, capacity_search,
+                       tail_point)
+
+JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_capacity.json"
+
+#: attainment may dip by at most this much when adding replicas before
+#: we call the curve non-monotone (simulation noise allowance)
+MONOTONE_TOL = 0.01
+WALL_BUDGET_S = 300.0
+
+
+def _fleet_sim(slo) -> SimConfig:
+    return SimConfig(model=MODEL, hw=HW, slo=slo,
+                     scheduler=SchedulerConfig(layer_group=8),
+                     sched_every=4, refit_interval=512,
+                     sched_pending_cap=64)
+
+
+def _run_fleet(work, slo, *, n_replicas: int, router: str, seed: int):
+    cs = ClusterSimulator(
+        ClusterConfig(sim=_fleet_sim(slo), n_replicas=n_replicas,
+                      router=router, seed=seed),
+        fitted_estimator())
+    return cs.run(work)
+
+
+def run(emit) -> None:
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    slo = WORKLOAD_SLOS["sharegpt"]
+
+    # headline: the big replay (trace reused below only via subsampling a
+    # freshly generated smaller trace — Interactions are immutable, but
+    # the curve wants an independent, cheaper workload anyway)
+    n_head = 2_000 if smoke else 100_000
+    rate_head = 20.0 if smoke else 240.0
+    head_replicas = 4
+    head_work = generate_fleet_interactions(n_head, rate_head, seed=11)
+
+    t0 = time.time()
+    res = _run_fleet(head_work, slo, n_replicas=head_replicas,
+                     router="prefix-affinity", seed=11)
+    wall = time.time() - t0
+    head_pt = tail_point(res.requests, slo)
+    n_played = len(res.requests)
+    emit("capacity_plan,section,requests,replicas,wall_s,req_per_s,"
+         "attainment,p99_norm_ttft_ms,p99_tpot_ms")
+    emit(f"capacity_plan,headline,{n_played},{head_replicas},{wall:.1f},"
+         f"{n_played / max(wall, 1e-9):.0f},{head_pt['attainment']:.3f},"
+         f"{head_pt['p99_norm_ttft_ms']:.1f},{head_pt['p99_tpot_ms']:.2f}")
+
+    assert n_played >= n_head, \
+        f"trace materialized {n_played} requests < requested {n_head}"
+    if not smoke:
+        assert wall < WALL_BUDGET_S, (
+            f"headline replay took {wall:.0f}s >= {WALL_BUDGET_S:.0f}s "
+            f"for {n_played} requests — fleet simulator regressed")
+
+    # capacity search: fixed subsampled trace, overload one replica,
+    # binary-search the smallest fleet whose p99 tails hold the SLO
+    n_curve = 800 if smoke else 8_000
+    rate_curve = 600.0 if smoke else 560.0
+    n_lo, n_hi = (1, 4) if smoke else (2, 6)
+    curve_work = generate_fleet_interactions(n_curve, rate_curve, seed=23)
+
+    t1 = time.time()
+
+    def run_at(n: int):
+        return _run_fleet(curve_work, slo, n_replicas=n,
+                          router="prefix-affinity", seed=23).requests
+
+    search = capacity_search(run_at, slo, n_lo=n_lo, n_hi=n_hi)
+    wall_search = time.time() - t1
+
+    emit("capacity_plan,replicas,n,cancelled,attainment,p99_norm_ttft_ms,"
+         "p99_tpot_ms,holds")
+    for pt in search["points"]:
+        emit(f"capacity_plan,{pt['replicas']},{pt['n']},"
+             f"{pt['n_cancelled']},{pt['attainment']:.3f},"
+             f"{pt['p99_norm_ttft_ms']:.1f},{pt['p99_tpot_ms']:.2f},"
+             f"{int(pt['holds'])}")
+
+    # monotonicity gate over every evaluated fleet size
+    pts = search["points"]
+    for a, b in zip(pts, pts[1:]):
+        assert b["attainment"] >= a["attainment"] - MONOTONE_TOL, (
+            f"attainment dropped {a['attainment']:.3f} -> "
+            f"{b['attainment']:.3f} going {a['replicas']} -> "
+            f"{b['replicas']} replicas — curve is not monotone")
+        assert a["holds"] <= b["holds"], (
+            f"SLO held at {a['replicas']} replicas but not at "
+            f"{b['replicas']} — capacity is not monotone")
+    assert search["min_replicas"] is not None, (
+        f"even {n_hi} replicas cannot hold the SLO at "
+        f"{rate_curve} req/s — raise n_hi or lower the trace rate")
+    assert search["min_replicas"] > n_lo, (
+        f"{n_lo} replica(s) already hold the SLO at the search rate — "
+        "the search trace is too light to exercise the binary search")
+
+    emit(f"capacity_plan-headline,min_replicas={search['min_replicas']},"
+         f"headline_wall_s={wall:.1f},headline_requests={n_played},"
+         f"search_wall_s={wall_search:.1f},"
+         f"headline_attainment={head_pt['attainment']:.3f}")
+
+    doc = dict(
+        smoke=smoke,
+        headline=dict(requests=n_played, replicas=head_replicas,
+                      router="prefix-affinity", rate_req_s=rate_head,
+                      wall_s=round(wall, 2),
+                      req_per_s=round(n_played / max(wall, 1e-9), 1),
+                      rerouted=res.rerouted,
+                      total_cycles=res.total_cycles, **head_pt),
+        search=dict(min_replicas=search["min_replicas"],
+                    quantile=search["quantile"], slo=search["slo"],
+                    trace_requests=n_curve, rate_req_s=rate_curve,
+                    wall_s=round(wall_search, 2),
+                    points=search["points"]),
+        monotone=True,
+    )
+    JSON_PATH.write_text(json.dumps(doc, indent=2, sort_keys=True))
+    emit(f"wrote {JSON_PATH.name}")
+
+
+if __name__ == "__main__":
+    run(print)

@@ -1,38 +1,46 @@
-"""Replay-vs-sim cross-validation: the same generate_trace workload runs
-(a) through the discrete-event simulator and (b) through the real
+"""Replay-vs-sim cross-validation: the same trace runs (a) through the
+fused/refit-aware discrete-event simulator and (b) through the real
 BulletServer behind the online frontend on an estimator-clocked virtual
-replay, and the goodput/latency rows land side by side. This is the
-closed loop the sim-only evaluation lacked: the simulator's prediction is
-checked against real-model execution of the identical trace."""
+replay, and the cycle economics land side by side (docs/SIMULATOR.md).
+
+This is the closed loop the sim-only evaluation lacked, and it gates on
+two invariants rather than eyeballing rows:
+
+- **Partition-table honesty** — the simulator must schedule over exactly
+  the partition table the engine pre-built (same tile quantization, same
+  chip splits). A private re-quantization in the sim silently changes
+  every downstream capacity answer, so a mismatch raises RuntimeError
+  instead of producing numbers.
+- **Mean-cycle agreement** — both sides price cycles through the one
+  :func:`repro.core.estimator.predict_cycle` charging rule, so the mean
+  predicted cycle time of the sim's schedule must agree with the mean of
+  the engine's fused replay within ``CYCLE_TOL`` (15%). Residual gap is
+  genuine composition divergence (admission order, pause decisions), not
+  pricing drift.
+
+``tests/test_simulator.py`` runs the same :func:`cross_validate` helper
+on a smaller trace as a tier-1 guard.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from typing import Dict, List
+
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.engine import BulletServer
-from repro.core.estimator import HardwareSpec, PerfEstimator
-from repro.core.profiler import SurrogateMachine
+from repro.core.estimator import (HardwareSpec, PerfEstimator, fit_params)
+from repro.core.profiler import SurrogateMachine, run_profiling
 from repro.core.simulate import SimConfig, ServingSimulator
-from repro.models import init_params
-from repro.serving.frontend import (OnlineFrontend, VirtualClock,
-                                    estimator_cycle_cost)
 from repro.serving.request import Request, WORKLOAD_SLOS
 from repro.serving.workload import fit_trace_to_context, generate_trace
 
 DATASET = "sharegpt"
 RATE = 8.0
-DURATION = 4.0
-MAX_REQUESTS = 12
+DURATION = 5.0
+MAX_REQUESTS = 16
 MAX_LEN = 64
-
-
-def _trace(cfg):
-    return fit_trace_to_context(
-        generate_trace(DATASET, RATE, DURATION, seed=1,
-                       max_requests=MAX_REQUESTS), MAX_LEN)
+#: sim-vs-engine mean predicted cycle time must agree within this
+CYCLE_TOL = 0.15
 
 
 def _clone(trace):
@@ -40,33 +48,113 @@ def _clone(trace):
                     output_len=r.output_len) for r in trace]
 
 
-def run(emit) -> None:
-    cfg = get_config("qwen3-1.7b").reduced()
-    hw = HardwareSpec(n_chips=2)
-    est = PerfEstimator(hw)
+def cross_validate(cfg, est: PerfEstimator, trace: List[Request], *,
+                   max_len: int, max_slots: int = 4,
+                   truth_seed: int = 7) -> Dict:
+    """Run ``trace`` through the simulator and the real engine's virtual
+    replay; return both metrics, both partition tables, and the mean
+    predicted cycle time on each side.
+
+    Raises RuntimeError when the simulator's partition table is not the
+    engine's — the drift this gate exists to catch.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.engine import BulletServer
+    from repro.models import init_params
+    from repro.serving.frontend import (OnlineFrontend, VirtualClock,
+                                        estimator_cycle_cost)
+
+    hw = est.hw
     slo = WORKLOAD_SLOS[DATASET]
-    trace = _trace(cfg)
 
-    sim = ServingSimulator(SimConfig(model=cfg, hw=hw, slo=slo), est,
-                           SurrogateMachine(hw, seed=7), "bullet")
-    m_sim = sim.run(_clone(trace))
+    # simulator side: cap the decode batch at the engine's slot count so
+    # both sides chop the same work into comparably sized cycles
+    sim_s = ServingSimulator(
+        SimConfig(model=cfg, hw=hw, slo=slo, max_decode_batch=max_slots),
+        est, SurrogateMachine(hw, seed=truth_seed), "bullet")
+    m_sim = sim_s.run(_clone(trace))
 
+    # engine side: real model, virtual clock advanced by the shared
+    # predict_cycle charging rule
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    server = BulletServer(cfg, params, slo=slo, max_slots=4, max_len=MAX_LEN,
-                          est=est)
-    fe = OnlineFrontend(server, VirtualClock(),
-                        cycle_cost=estimator_cycle_cost)
+    server = BulletServer(cfg, params, slo=slo, max_slots=max_slots,
+                          max_len=max_len, est=est)
+    eng_cycles: List[float] = []
+
+    def _charge(s) -> float:
+        dt = estimator_cycle_cost(s)
+        if s.last_cycle_observation() is not None:
+            eng_cycles.append(dt)
+        return dt
+
+    fe = OnlineFrontend(server, VirtualClock(), cycle_cost=_charge)
     for r in _clone(trace):
         fe.submit(r, np.random.default_rng(r.rid).integers(
             0, cfg.vocab_size, r.prompt_len, dtype=np.int32))
     m_replay = fe.run()
 
-    emit("replay_vs_sim,system,goodput,thr_tok_s,mean_ttft_ms,mean_tpot_ms")
-    for name, m in (("sim-bullet", m_sim), ("replay-bullet", m_replay)):
-        emit(f"replay_vs_sim,{name},{m.goodput:.3f},"
-             f"{m.throughput_tok_s:.1f},{m.mean_ttft_s*1e3:.2f},"
-             f"{m.mean_tpot_ms:.2f}")
+    sim_table = [p.key for p in sim_s.replica.rm.partitions]
+    eng_table = [p.key for p in server.rm.partitions]
+    if sim_table != eng_table:
+        raise RuntimeError(
+            "partition-table drift: the simulator scheduled over\n"
+            f"  {sim_table}\nbut the engine pre-built\n  {eng_table}\n"
+            "repro.core.simulate must mirror the engine's ResourceManager "
+            "table exactly (see docs/SIMULATOR.md)")
+    if sim_s.replica.scheduler.split_candidates != \
+            server.scheduler.split_candidates:
+        raise RuntimeError(
+            "split-candidate drift between sim scheduler and engine "
+            "scheduler — both must search the pre-built tile table")
+
+    sim_preds = [p for _, p, _ in sim_s.pred_actual]
+    mean_sim = sum(sim_preds) / max(len(sim_preds), 1)
+    mean_eng = sum(eng_cycles) / max(len(eng_cycles), 1)
+    return {
+        "m_sim": m_sim, "m_replay": m_replay,
+        "mean_cycle_sim_s": mean_sim, "mean_cycle_eng_s": mean_eng,
+        "cycle_gap": abs(mean_sim - mean_eng) / max(mean_eng, 1e-12),
+        "n_cycles_sim": len(sim_preds), "n_cycles_eng": len(eng_cycles),
+        "table": sim_table, "server": server,
+    }
+
+
+def run(emit) -> None:
+    from repro.configs import get_config
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    hw = HardwareSpec(n_chips=2)
+    samples = run_profiling(cfg, hw, max_sl=2048, max_bs=16, max_cl=2048)
+    est = PerfEstimator(hw, fit_params(samples, cfg, hw, iters=20))
+    trace = fit_trace_to_context(
+        generate_trace(DATASET, RATE, DURATION, seed=1,
+                       max_requests=MAX_REQUESTS), MAX_LEN)
+
+    r = cross_validate(cfg, est, trace, max_len=MAX_LEN)
+    m_sim, m_replay = r["m_sim"], r["m_replay"]
+
+    emit("replay_vs_sim,system,goodput,thr_tok_s,mean_ttft_ms,mean_tpot_ms,"
+         "cycles,mean_cycle_ms")
+    emit(f"replay_vs_sim,sim-bullet,{m_sim.goodput:.3f},"
+         f"{m_sim.throughput_tok_s:.1f},{m_sim.mean_ttft_s*1e3:.2f},"
+         f"{m_sim.mean_tpot_ms:.2f},{r['n_cycles_sim']},"
+         f"{r['mean_cycle_sim_s']*1e3:.3f}")
+    emit(f"replay_vs_sim,replay-bullet,{m_replay.goodput:.3f},"
+         f"{m_replay.throughput_tok_s:.1f},{m_replay.mean_ttft_s*1e3:.2f},"
+         f"{m_replay.mean_tpot_ms:.2f},{r['n_cycles_eng']},"
+         f"{r['mean_cycle_eng_s']*1e3:.3f}")
+
+    assert r["cycle_gap"] <= CYCLE_TOL, (
+        f"sim mean cycle {r['mean_cycle_sim_s']*1e3:.3f}ms vs engine "
+        f"{r['mean_cycle_eng_s']*1e3:.3f}ms — gap {r['cycle_gap']:.1%} "
+        f"> {CYCLE_TOL:.0%}; the sim's cycle composition no longer "
+        "tracks the engine's")
+
     gap = abs(m_replay.goodput - m_sim.goodput)
     emit(f"replay_vs_sim-headline,goodput_gap={gap:.3f},"
-         f"replay_preemptions={server.stats.preempted},"
-         f"replay_reconfigs={server.stats.reconfigs}")
+         f"cycle_gap={r['cycle_gap']:.3f},"
+         f"table_entries={len(r['table'])},"
+         f"replay_preemptions={r['server'].stats.preempted},"
+         f"replay_reconfigs={r['server'].stats.reconfigs}")

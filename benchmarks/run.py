@@ -28,6 +28,7 @@ BENCHES = [
     ("prefix_reuse", "benchmarks.prefix_reuse"),
     ("chaos_replay", "benchmarks.chaos_replay"),
     ("fairness_replay", "benchmarks.fairness_replay"),
+    ("capacity_plan", "benchmarks.capacity_plan"),
     ("roofline", "benchmarks.roofline_table"),
 ]
 

@@ -1,3 +1,7 @@
+"""Model/architecture registry: the assigned architectures, their
+``ModelConfig`` definitions, and the canonical input shapes used by the
+dry-run and perf harnesses (see docs/ARCHITECTURE.md)."""
+
 from repro.configs.base import (
     ATTN, SWA, RGLRU, SSD, MLP, MOE,
     BlockSpec, InputShape, ModelConfig, INPUT_SHAPES,

@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's primary contribution — the SYSTEM lives here
+(estimator, profiler, partitioner, scheduler, single-replica simulator)
+in the host framework. Sibling subpackages hold the substrates
+(``serving/``, ``kernels/``, ``sim/``). See docs/DESIGN.md."""

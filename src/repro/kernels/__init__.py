@@ -1,7 +1,8 @@
-# Compute hot-spots Bullet optimizes: attention (prefill + decode) and the
-# fused prefill+decode co-execution schedule, plus the recurrent scans the
-# SSM/hybrid assigned architectures need. Validated against ref.py oracles
-# in interpret mode (tests/test_kernels.py).
+"""Compute hot-spots Bullet optimizes: attention (prefill + decode) and
+the fused prefill+decode co-execution schedule, plus the recurrent scans
+the SSM/hybrid assigned architectures need. Validated against ref.py
+oracles in interpret mode (tests/test_kernels.py)."""
+
 from jax.experimental.pallas import tpu as _pltpu
 
 if not hasattr(_pltpu, "CompilerParams"):       # jax < 0.5 naming

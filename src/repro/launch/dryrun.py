@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: prove every (architecture × input shape × mesh)
 lowers and compiles on the production meshes (16×16 single-pod, 2×16×16
 multi-pod), and extract the memory/cost/roofline numbers.
@@ -11,6 +8,9 @@ Usage:
       --shape decode_32k [--multi-pod]
 Results append to launch_results/dryrun.json (idempotent per combo).
 """
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json

@@ -1,6 +1,3 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """§Perf hillclimb harness: re-lower one (arch × shape) under a named
 variant, report the roofline terms and the top traffic contributors, and
 append the iteration to launch_results/perf_iterations.json.
@@ -12,6 +9,9 @@ Variants are toggled by environment knobs read in the model code
   PYTHONPATH=src python -m repro.launch.perf --arch codeqwen1.5-7b \
       --shape prefill_32k --name baseline
 """
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import json

@@ -11,6 +11,10 @@ Modes:
   apples-to-apples replay-vs-sim comparison on one identical trace, run
   `python -m benchmarks.run replay_vs_sim`.
 - sim: estimator-driven discrete-event comparison vs baselines at scale.
+- simulate-fleet: event-driven multi-replica cluster simulation — N
+  simulated Bullet instances behind a pluggable router replay a
+  multi-tenant closed-loop trace (docs/SIMULATOR.md); --fault-plan specs
+  become replica outage windows.
 - dryrun: lower+compile prefill/decode for the production mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
@@ -19,6 +23,8 @@ Modes:
       --dataset sharegpt --rate 8 --duration 5
   PYTHONPATH=src python -m repro.launch.serve --mode sim --dataset sharegpt \
       --rate 40
+  PYTHONPATH=src python -m repro.launch.serve --mode simulate-fleet \
+      --replicas 4 --router prefix-affinity --sessions 2000 --rate 120
 """
 
 import argparse
@@ -204,9 +210,55 @@ def _sim(args):
         print(f"{system:16s} {m.row()}")
 
 
+def _fleet(args):
+    from repro.configs import get_config
+    from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+    from repro.core.profiler import run_profiling
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.simulate import SimConfig
+    from repro.resilience import FaultPlan
+    from repro.serving.request import WORKLOAD_SLOS
+    from repro.serving.tenancy import generate_fleet_interactions
+    from repro.sim import ClusterConfig, ClusterSimulator, tail_point
+
+    arch = "llama3.1-8b" if args.arch == "qwen3-1.7b" else args.arch
+    cfg = get_config(arch)
+    hw = HardwareSpec(n_chips=args.chips)
+    samples = run_profiling(cfg, hw, max_sl=4096, max_bs=32, max_cl=4096)
+    est = PerfEstimator(hw, fit_params(samples, cfg, hw, iters=30))
+    slo = WORKLOAD_SLOS[args.dataset]
+    work = generate_fleet_interactions(args.sessions, args.rate,
+                                       seed=args.seed)
+    faults = (FaultPlan.from_json(args.fault_plan)
+              if args.fault_plan else None)
+    # fleet-scale fidelity/speed knobs, same as benchmarks/capacity_plan.py
+    cc = ClusterConfig(
+        sim=SimConfig(model=cfg, hw=hw, slo=slo,
+                      scheduler=SchedulerConfig(layer_group=8),
+                      sched_every=4, refit_interval=512,
+                      sched_pending_cap=64),
+        n_replicas=args.replicas, router=args.router, faults=faults,
+        seed=args.seed)
+    res = ClusterSimulator(cc, est).run(work)
+    pt = tail_point(res.requests, slo)
+    print(f"fleet {args.replicas}x{arch} router={args.router} "
+          f"{len(res.requests)} requests ({len(work)} sessions) "
+          f"@ {args.rate:.0f} req/s")
+    print(f"  {res.metrics.row()}")
+    print(f"  attainment={pt['attainment']:.3f} "
+          f"p99_norm_ttft={pt['p99_norm_ttft_ms']:.1f}ms "
+          f"p99_tpot={pt['p99_tpot_ms']:.2f}ms "
+          f"slo_holds={pt['holds']} rerouted={res.rerouted} "
+          f"cancelled_no_replica={res.cancelled_no_replica}")
+    for i, (cycles, refits, reused) in enumerate(res.replica_stats):
+        print(f"  replica {i}: cycles={cycles} refits={refits} "
+              f"reused_prefill_tokens={reused}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("host", "replay", "sim", "dryrun"),
+    ap.add_argument("--mode", choices=("host", "replay", "sim",
+                                       "simulate-fleet", "dryrun"),
                     default="host")
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=16)
@@ -222,6 +274,17 @@ def main():
     ap.add_argument("--systems",
                     default="bullet,chunked-1024,chunked-2048,naive")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=4,
+                    help="fleet size for --mode simulate-fleet: number of "
+                         "simulated Bullet replicas behind the router")
+    ap.add_argument("--router", default="prefix-affinity",
+                    help="cluster routing policy (simulate-fleet mode): "
+                         "round-robin, least-kv, prefix-affinity, or "
+                         "tenant-aware (docs/SIMULATOR.md)")
+    ap.add_argument("--sessions", type=int, default=2000, metavar="N",
+                    help="closed-loop turn budget for the simulate-fleet "
+                         "multi-tenant trace (sessions are drawn until "
+                         "their turns total at least N)")
     ap.add_argument("--clock", choices=("virtual", "wall"), default="virtual",
                     help="replay clock: deterministic virtual time or "
                          "(scaled) wall time")
@@ -309,6 +372,8 @@ def main():
     if args.mode == "sim":
         args.arch = "llama3.1-8b" if args.arch == "qwen3-1.7b" else args.arch
         _sim(args)
+    elif args.mode == "simulate-fleet":
+        _fleet(args)
     elif args.mode == "replay":
         _replay(args)
     else:

@@ -1,3 +1,8 @@
+"""Model code: the generic transformer/hybrid forward passes (prefill,
+chunked prefill, decode, fused-group decode), parameter/cache init, and
+the sharding policy that maps a ``ModelConfig`` onto a mesh
+(docs/DESIGN.md §4)."""
+
 from repro.models.transformer import (
     init_params, param_specs, param_count,
     init_cache, init_paged_cache, supports_paged_cache, cache_specs,

@@ -58,7 +58,7 @@ class ShardingPolicy:
     #: token-parallel shard_map MoE dispatch (serving); training uses the
     #: GSPMD einsum path — microbatched dispatch buffers are small, and the
     #: shard_map backward's bf16 grad all-reduce trips an XLA:CPU
-    #: AllReducePromotion CHECK (compiler bug, documented in DESIGN.md)
+    #: AllReducePromotion CHECK (compiler bug, documented in DESIGN.md §4)
     moe_token_shard_map: bool = True
     #: 2D expert-weight sharding (experts over model, d_ff over data):
     #: weights stay fully resident — no per-layer FSDP gathers; the

@@ -395,6 +395,38 @@ def generate_tenant_interactions(
     return out
 
 
+def generate_fleet_interactions(
+        n_requests: int, rate_req_s: float, *, n_apps: int = 8,
+        n_users: int = 50_000, turns: int = 4, new_tokens: int = 48,
+        output_tokens: int = 32, think_time_s: float = 2.0,
+        zipf_a: float = 1.1, seed: int = 0) -> List[Interaction]:
+    """A fleet-sized multi-tenant closed-loop trace: at least
+    ``n_requests`` total turns across Zipf-skewed apps, arriving at
+    ``rate_req_s`` requests/second overall (session arrivals are scaled by
+    the mean turns-per-session so the *turn* rate matches). This is the
+    capacity-planning workload (docs/SIMULATOR.md): day-long
+    million-request traces are just larger ``n_requests`` / smaller
+    ``rate_req_s`` — the simulator's cost scales with event count, not
+    trace duration. Deterministic in ``seed``.
+    """
+    apps = make_apps(n_apps, zipf_a=zipf_a)
+    # E[turns/session] for integers(turns//2, turns+1)
+    mean_turns = (max(1, turns // 2) + turns) / 2.0
+    sessions = generate_tenant_interactions(
+        apps, int(np.ceil(n_requests / mean_turns * 1.05)),
+        rate_req_s / mean_turns, n_users=n_users, zipf_a=zipf_a,
+        turns=turns, new_tokens=new_tokens, output_tokens=output_tokens,
+        think_time_s=think_time_s, seed=seed)
+    out: List[Interaction] = []
+    total = 0
+    for it in sessions:
+        out.append(it)
+        total += len(it.turns)
+        if total >= n_requests:
+            break
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Fairness metrics
 # ---------------------------------------------------------------------------

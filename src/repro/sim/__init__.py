@@ -1,0 +1,18 @@
+"""Fleet-scale event-driven serving simulation (docs/SIMULATOR.md).
+
+``repro.sim`` drives N single-replica Bullet state machines
+(:class:`repro.core.simulate.BulletReplicaSim`) behind a cluster router in
+one event heap — the capacity-planning level of the simulator stack. The
+single-replica level lives in ``repro.core.simulate``.
+"""
+
+from repro.sim.cluster import (ClusterConfig, ClusterResult,
+                               ClusterSimulator, ROUTERS, make_router)
+from repro.sim.capacity import (attainment_curve, capacity_search,
+                                slo_holds, tail_point)
+
+__all__ = [
+    "ClusterConfig", "ClusterResult", "ClusterSimulator", "ROUTERS",
+    "make_router", "attainment_curve", "capacity_search", "slo_holds",
+    "tail_point",
+]

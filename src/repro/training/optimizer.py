@@ -3,7 +3,7 @@
 AdamW for <10B models; Adafactor (factored second moment, no first moment)
 for the huge assigned configs (llama4-maverick 400B, mixtral-8x22B,
 internvl2-76B) where Adam state would not fit 16 GB/chip even fully
-sharded — the standard large-model fallback, noted in DESIGN.md.
+sharded — the standard large-model fallback, noted in DESIGN.md §5.
 """
 
 from __future__ import annotations

@@ -1,0 +1,147 @@
+"""Fleet-scale cluster simulation: routing policies, replica outages,
+deterministic replay, and the capacity-planning loop (docs/SIMULATOR.md)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.estimator import HardwareSpec, PerfEstimator, fit_params
+from repro.core.profiler import run_profiling
+from repro.core.scheduler import SchedulerConfig
+from repro.core.simulate import SimConfig
+from repro.resilience.faults import FaultPlan, FaultSpec
+from repro.serving.request import Phase, WORKLOAD_SLOS
+from repro.serving.tenancy import generate_fleet_interactions
+from repro.sim import (ClusterConfig, ClusterSimulator, ROUTERS,
+                       attainment_curve, capacity_search)
+
+CFG = get_config("llama3.1-8b")
+HW = HardwareSpec(n_chips=2)
+SLO = WORKLOAD_SLOS["sharegpt"]
+
+
+@pytest.fixture(scope="module")
+def est():
+    samples = run_profiling(CFG, HW, max_sl=4096, max_bs=32, max_cl=4096)
+    return PerfEstimator(HW, fit_params(samples, CFG, HW, iters=25))
+
+
+def fleet_sim() -> SimConfig:
+    # the capacity-plan bench's fleet knobs (speed/fidelity trade only)
+    return SimConfig(model=CFG, hw=HW, slo=SLO,
+                     scheduler=SchedulerConfig(layer_group=8),
+                     sched_every=4, refit_interval=512,
+                     sched_pending_cap=64)
+
+
+def run_fleet(est, work, *, n=2, router="round-robin", faults=None,
+              seed=0):
+    cc = ClusterConfig(sim=fleet_sim(), n_replicas=n, router=router,
+                       faults=faults, seed=seed)
+    return ClusterSimulator(cc, est).run(work)
+
+
+def _signature(res):
+    return sorted((r.rid, r.arrival, r.first_token_time, r.finish_time,
+                   r.generated) for r in res.requests)
+
+
+def test_same_seed_replays_identically(est):
+    """The event heap is fully deterministic: same trace + same seed must
+    reproduce every per-request timestamp bit-for-bit."""
+    work = generate_fleet_interactions(400, 60.0, seed=4)
+    a = run_fleet(est, work, n=3, router="least-kv", seed=2)
+    b = run_fleet(est, work, n=3, router="least-kv", seed=2)
+    assert _signature(a) == _signature(b)
+    assert a.total_cycles == b.total_cycles
+    c = run_fleet(est, work, n=3, router="least-kv", seed=3)
+    assert _signature(a) != _signature(c)   # the seed actually matters
+
+
+@pytest.mark.parametrize("router", sorted(ROUTERS))
+def test_every_router_completes_the_trace(est, router):
+    work = generate_fleet_interactions(300, 50.0, seed=7)
+    res = run_fleet(est, work, n=2, router=router)
+    assert res.requests and all(
+        r.phase == Phase.FINISHED for r in res.requests), router
+    assert res.cancelled_no_replica == 0
+    # every replica did some work under each policy
+    assert all(c > 0 for c, _, _ in res.replica_stats), router
+
+
+def test_replica_failure_reroutes_and_recovers(est):
+    """A FaultPlan outage window drains the dead replica's in-flight work
+    back through the router; nothing is lost, and the replica rejoins
+    after the window."""
+    work = generate_fleet_interactions(400, 80.0, seed=11)
+    plan = FaultPlan(specs=[
+        FaultSpec(kind="dispatch", target="any", blocks=1, start=1, end=4)])
+    res = run_fleet(est, work, n=2, router="round-robin", faults=plan)
+    assert all(r.phase == Phase.FINISHED for r in res.requests)
+    assert res.rerouted > 0                 # drained work was re-homed
+    assert res.cancelled_no_replica == 0    # replica 0 absorbed it
+    # the survivor did strictly more work than the faulted replica
+    assert res.replica_stats[0][0] > res.replica_stats[1][0]
+    # same plan, same seed: outage handling is replay-deterministic too
+    res2 = run_fleet(est, work, n=2, router="round-robin", faults=plan)
+    assert _signature(res) == _signature(res2)
+
+
+def test_all_replicas_down_cancels_or_requeues(est):
+    """With every replica inside an outage window, arrivals either wait
+    for the window to close or are cancelled — never silently dropped."""
+    work = generate_fleet_interactions(60, 40.0, seed=13)
+    plan = FaultPlan(specs=[
+        FaultSpec(kind="dispatch", target="any", blocks=0, start=0, end=3),
+        FaultSpec(kind="dispatch", target="any", blocks=1, start=0, end=3)])
+    res = run_fleet(est, work, n=2, router="round-robin", faults=plan)
+    n_done = sum(r.phase == Phase.FINISHED for r in res.requests)
+    n_cancelled = sum(r.phase == Phase.CANCELLED for r in res.requests)
+    assert n_done + n_cancelled == len(res.requests)
+    assert n_done > 0                       # the fleet recovered at t=3
+
+
+def test_prefix_affinity_beats_round_robin_on_reuse(est):
+    """Multi-turn sessions leave their KV prefix on the replica that
+    served them; pinning a session to its replica converts follow-up
+    turns into suffix-only prefills, which round-robin scatters away."""
+    work = generate_fleet_interactions(800, 70.0, seed=5)
+    reused = {}
+    for router in ("round-robin", "prefix-affinity"):
+        res = run_fleet(est, work, n=4, router=router)
+        assert all(r.phase == Phase.FINISHED for r in res.requests)
+        reused[router] = sum(ru for _, _, ru in res.replica_stats)
+    assert reused["prefix-affinity"] > 1.5 * reused["round-robin"]
+
+
+def test_attainment_monotone_in_replicas(est):
+    """More replicas never hurt the tail: the replicas-vs-attainment
+    curve under overload is monotone non-decreasing."""
+    work = generate_fleet_interactions(1000, 1500.0, seed=9)
+
+    def run_at(n):
+        return run_fleet(est, work, n=n, router="prefix-affinity",
+                         seed=9).requests
+
+    curve = attainment_curve(run_at, [1, 2, 4], SLO)
+    atts = [pt["attainment"] for pt in curve]
+    assert atts[0] < 1.0                    # one replica is overloaded
+    assert all(b >= a - 0.01 for a, b in zip(atts, atts[1:]))
+
+
+def test_capacity_answer_monotone_in_load(est):
+    """The provisioning answer can only grow with traffic: min replicas
+    at a light rate <= min replicas at a heavy rate."""
+
+    def min_replicas(rate):
+        work = generate_fleet_interactions(800, rate, seed=9)
+
+        def run_at(n):
+            return run_fleet(est, work, n=n, router="prefix-affinity",
+                             seed=9).requests
+
+        return capacity_search(run_at, SLO, n_lo=1, n_hi=4)["min_replicas"]
+
+    light, heavy = min_replicas(40.0), min_replicas(1500.0)
+    assert light is not None and heavy is not None
+    assert light <= heavy
+    assert heavy >= 2                       # the heavy rate needs a fleet

@@ -1,21 +1,39 @@
 """Docs tree integrity: the canonical docs exist, README links resolve,
-and the module map names real modules (the same contract the CI lint job
-checks with a path-exists pass)."""
+the module map names real modules, every doc file a source docstring
+cites exists, every ``DESIGN.md §N`` citation resolves to a real
+section, and every ``launch/serve.py`` CLI flag is documented (the
+doc/CLI drift gate)."""
 
+import ast
 import re
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 LINK = re.compile(r"\]\(((?:docs|benchmarks|examples|src|tests)/[^)#]+)")
+#: an UPPER_CASE.md mention inside prose/docstrings, with or without a
+#: docs/ prefix
+DOC_MENTION = re.compile(r"\b(?:docs/)?([A-Z][A-Z_0-9]*\.md)\b")
 
 
 def md_links(path: Path):
     return LINK.findall(path.read_text())
 
 
+def _py_docstrings(path: Path):
+    """Every docstring in a file (module, classes, functions)."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            doc = ast.get_docstring(node)
+            if doc:
+                yield doc
+
+
 def test_canonical_docs_exist():
     for name in ("ARCHITECTURE.md", "PERF_MODEL.md", "TUNING.md",
-                 "RESILIENCE.md", "KV_SHARING.md"):
+                 "RESILIENCE.md", "KV_SHARING.md", "DESIGN.md",
+                 "SIMULATOR.md"):
         p = ROOT / "docs" / name
         assert p.is_file(), f"missing docs/{name}"
         assert len(p.read_text()) > 1500, f"docs/{name} is a stub"
@@ -42,6 +60,63 @@ def test_docs_cross_links_resolve():
         for rel in re.findall(r"\]\(([A-Z_]+\.md)", doc.read_text()):
             assert (ROOT / "docs" / rel).exists(), (
                 f"{doc.name} links missing docs/{rel}")
+
+
+def test_src_docstrings_cite_existing_docs():
+    """Any docs/*.md (or bare UPPER.md) a source docstring names must
+    exist — a renamed or deleted doc page may not leave dangling
+    citations behind."""
+    bad = []
+    sources = [*(ROOT / "src").rglob("*.py"), *(ROOT / "examples").glob("*.py"),
+               *(ROOT / "benchmarks").glob("*.py")]
+    assert sources
+    for path in sources:
+        for doc in _py_docstrings(path):
+            for name in DOC_MENTION.findall(doc):
+                if not ((ROOT / "docs" / name).is_file()
+                        or (ROOT / name).is_file()):
+                    bad.append(f"{path.relative_to(ROOT)} cites {name}")
+    assert not bad, f"dangling doc citations: {sorted(set(bad))}"
+
+
+def test_design_section_citations_resolve():
+    """Every ``DESIGN.md §N`` citation anywhere in the tree must land on
+    a real ``## §N`` section of docs/DESIGN.md."""
+    design = (ROOT / "docs" / "DESIGN.md").read_text()
+    sections = set(re.findall(r"^## §(\d+)", design, re.MULTILINE))
+    assert sections >= {"2", "3", "4", "6"}
+    bad = []
+    for sub in ("src", "examples", "benchmarks", "tests", "docs"):
+        for path in (ROOT / sub).rglob("*.py"):
+            for n in re.findall(r"DESIGN\.md[^\S\n]*§(\d+)",
+                                path.read_text()):
+                if n not in sections:
+                    bad.append(f"{path.relative_to(ROOT)} cites §{n}")
+    assert not bad, f"DESIGN.md citations to missing sections: {bad}"
+
+
+def test_every_serve_cli_flag_is_documented():
+    """The doc/CLI drift gate: each argparse option string registered by
+    launch/serve.py must appear somewhere under docs/ (TUNING.md holds
+    the canonical flag table)."""
+    tree = ast.parse(
+        (ROOT / "src" / "repro" / "launch" / "serve.py").read_text())
+    flags = set()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"):
+            for arg in node.args:
+                if (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")):
+                    flags.add(arg.value)
+    assert len(flags) >= 15, f"expected a grown CLI, found {sorted(flags)}"
+    corpus = "".join(p.read_text() for p in (ROOT / "docs").glob("*.md"))
+    missing = sorted(f for f in flags if f not in corpus)
+    assert not missing, (
+        f"serve.py flags undocumented under docs/: {missing} — add them "
+        "to the TUNING.md CLI table")
 
 
 def test_architecture_module_map_names_real_modules():

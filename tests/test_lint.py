@@ -84,6 +84,23 @@ def test_dataclass_defaults_use_field_factory():
                      f"field(default_factory=...): {bad}")
 
 
+def test_every_public_module_has_a_docstring():
+    """Docstring coverage: every public module under src/repro (no
+    leading underscore anywhere in its relative path) must open with a
+    module docstring — the docs tree's section citations hang off them
+    (see tests/test_docs.py)."""
+    bad = []
+    for path in _sources():
+        rel = path.relative_to(SRC)
+        if any(part.startswith("_") and part != "__init__.py"
+               for part in rel.parts):
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        if not ast.get_docstring(tree):
+            bad.append(str(rel))
+    assert not bad, f"public modules without a module docstring: {bad}"
+
+
 def test_guard_config_handoff_is_per_instance():
     """The concrete instance the audit caught: every GuardConfig must own
     its HandoffPolicy."""

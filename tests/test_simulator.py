@@ -78,14 +78,19 @@ def test_chunk_size_tradeoff_direction(est):
 
 
 def test_timeline_log_records_dynamic_partitions(est):
-    _, _, s = run("bullet", est, rate=35.0, dur=10.0)
+    """Fig. 12: under enough decode pressure that the §3.3.3 pause gate is
+    sometimes rejected, the fused-objective search actually re-partitions —
+    the timeline shows intermediate table splits, not just the
+    prefill-exclusive / decode-only extremes."""
     s2 = ServingSimulator(
         SimConfig(model=CFG, hw=HW, slo=WORKLOAD_SLOS["sharegpt"]),
         est, SurrogateMachine(HW, seed=7), "bullet")
-    trace = generate_trace("sharegpt", 35.0, 10.0, seed=3)
+    trace = generate_trace("sharegpt", 50.0, 10.0, seed=3)
     s2.run(trace, log_timeline=True)
     units = {e.prefill_units for e in s2.log}
     assert len(units) > 2             # actually re-partitions (Fig. 12)
+    kinds = {k for k, _, _ in s2.pred_actual}
+    assert "fused" in kinds           # Eq. 2 co-located cycles happened
 
 
 def test_estimator_slo_classification_accuracy(est):
@@ -100,6 +105,28 @@ def test_estimator_slo_classification_accuracy(est):
     for thresh in (0.005, 0.02):
         agree = sum((p <= thresh) == (a <= thresh) for _, p, a in pairs)
         assert agree / len(pairs) > 0.8
+
+
+def test_sim_cross_validates_against_engine_replay():
+    """The tier-1 cut of benchmarks/replay_vs_sim.py: the fused/refit-
+    aware simulator and the real engine's estimator-clocked replay must
+    schedule from the SAME partition table (cross_validate raises on
+    drift) and agree on mean predicted cycle time within 15%."""
+    from benchmarks.replay_vs_sim import cross_validate
+    from repro.serving.workload import fit_trace_to_context
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    hw = HardwareSpec(n_chips=2)
+    samples = run_profiling(cfg, hw, max_sl=2048, max_bs=16, max_cl=2048)
+    e = PerfEstimator(hw, fit_params(samples, cfg, hw, iters=20))
+    trace = fit_trace_to_context(
+        generate_trace("sharegpt", 8.0, 4.0, seed=1, max_requests=10), 64)
+    r = cross_validate(cfg, e, trace, max_len=64)
+    assert r["cycle_gap"] <= 0.15, (
+        f"sim {r['mean_cycle_sim_s']:.6f}s vs engine "
+        f"{r['mean_cycle_eng_s']:.6f}s per cycle ({r['cycle_gap']:.1%})")
+    assert r["m_sim"].goodput == r["m_replay"].goodput == 1.0
+    assert len(r["table"]) >= 5      # a real multi-entry partition table
 
 
 def test_workload_distributions_shape():
